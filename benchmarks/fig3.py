@@ -1,0 +1,73 @@
+"""Fig. 3 reproduction: GoogLeNet layer-wise area efficiency under FF-only /
+CF-only / mixed dataflows at 16-bit, vs Ara, with the per-layer strategy the
+mixed selector chose (the paper's annotation)."""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.core.isa import Dataflow
+from repro.core.perfmodel import (
+    AraModel,
+    SpeedModel,
+    evaluate_network,
+    evaluate_network_ara,
+    select_dataflow,
+)
+from repro.core.precision import Precision
+from repro.models.cnn_zoo import googlenet_layers
+
+PAPER = {
+    "mixed_over_ff": 1.88,
+    "mixed_over_cf": 1.38,
+    "ff_over_ara": 1.87,
+    "cf_over_ara": 2.55,
+    "mixed_over_ara": 3.53,
+}
+
+
+def compute(sm: SpeedModel | None = None, am: AraModel | None = None) -> dict:
+    sm, am = sm or SpeedModel(), am or AraModel()
+    gl = googlenet_layers()
+    prec = Precision.INT16
+    res = {s: evaluate_network(gl, prec, s, sm) for s in ("ff", "cf", "mixed")}
+    ara = evaluate_network_ara(gl, prec, am)
+    ratios = {
+        "mixed_over_ff": res["mixed"]["area_eff"] / res["ff"]["area_eff"],
+        "mixed_over_cf": res["mixed"]["area_eff"] / res["cf"]["area_eff"],
+        "ff_over_ara": res["ff"]["area_eff"] / ara["area_eff"],
+        "cf_over_ara": res["cf"]["area_eff"] / ara["area_eff"],
+        "mixed_over_ara": res["mixed"]["area_eff"] / ara["area_eff"],
+    }
+    decisions = [(l, select_dataflow(l, prec, sm)) for l in gl]
+    by_kernel: dict[int, Counter] = {}
+    for l, d in decisions:
+        by_kernel.setdefault(l.k, Counter())[d.name] += 1
+    return {"ratios": ratios, "per_layer": decisions, "by_kernel": by_kernel,
+            "nets": res, "ara": ara}
+
+
+def rows() -> list[tuple]:
+    r = compute()["ratios"]
+    return [(f"fig3_{k}", r[k], PAPER[k], r[k] / PAPER[k] - 1) for k in PAPER]
+
+
+def main() -> None:
+    out = compute()
+    print(f"{'metric':<24}{'model':>10}{'paper':>10}{'rel_err':>9}")
+    for name, got, paper, err in rows():
+        print(f"{name:<24}{got:>10.2f}{paper:>10.2f}{err * 100:>8.1f}%")
+    print("\nmixed-strategy selection by kernel size (paper: CF for 1x1, FF else):")
+    for k, cnt in sorted(out["by_kernel"].items()):
+        print(f"  conv{k}x{k}: {dict(cnt)}")
+    print("\nlayer-wise area efficiency (GOPS/mm^2, 16-bit, mixed):")
+    sm = SpeedModel()
+    for l, d in out["per_layer"][:10]:
+        from repro.core.perfmodel import evaluate_layer
+
+        p = evaluate_layer(l, Precision.INT16, "mixed", sm)
+        print(f"  {l.name:<22} k{l.k} {d.name:<3} {p.area_eff:7.2f}")
+    print("  ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Fig. 4 reproduction: average area efficiency across VGG16 / ResNet18 /
+GoogLeNet / SqueezeNet at 16/8/4-bit (mixed dataflow), SPEED vs Ara."""
+from __future__ import annotations
+
+from repro.core.perfmodel import (
+    AraModel,
+    SpeedModel,
+    evaluate_network,
+    evaluate_network_ara,
+)
+from repro.core.precision import Precision
+from repro.models.cnn_zoo import BENCHMARK_NETWORKS
+
+PAPER = {"ratio_16": 2.77, "ratio_8": 6.39, "avg4_area_eff": 94.6}
+
+
+def compute(sm: SpeedModel | None = None, am: AraModel | None = None) -> dict:
+    sm, am = sm or SpeedModel(), am or AraModel()
+    nets = {k: f() for k, f in BENCHMARK_NETWORKS.items()}
+    per_net: dict = {}
+    avg = {}
+    for bits in (16, 8, 4):
+        prec = Precision.from_bits(bits)
+        vals = {}
+        for name, ls in nets.items():
+            s = evaluate_network(ls, prec, "mixed", sm)["area_eff"]
+            a = (
+                evaluate_network_ara(ls, prec, am)["area_eff"]
+                if bits != 4
+                else None
+            )
+            vals[name] = (s, a)
+        per_net[bits] = vals
+        avg[bits] = (
+            sum(v[0] for v in vals.values()) / len(vals),
+            sum(v[1] for v in vals.values()) / len(vals) if bits != 4 else None,
+        )
+    return {"per_net": per_net, "avg": avg}
+
+
+def rows() -> list[tuple]:
+    r = compute()["avg"]
+    out = [
+        ("fig4_ratio_16b", r[16][0] / r[16][1], PAPER["ratio_16"],
+         r[16][0] / r[16][1] / PAPER["ratio_16"] - 1),
+        ("fig4_ratio_8b", r[8][0] / r[8][1], PAPER["ratio_8"],
+         r[8][0] / r[8][1] / PAPER["ratio_8"] - 1),
+        ("fig4_avg4_area_eff", r[4][0], PAPER["avg4_area_eff"],
+         r[4][0] / PAPER["avg4_area_eff"] - 1),
+    ]
+    return out
+
+
+def main() -> None:
+    out = compute()
+    print(f"{'metric':<24}{'model':>10}{'paper':>10}{'rel_err':>9}")
+    for name, got, paper, err in rows():
+        print(f"{name:<24}{got:>10.2f}{paper:>10.2f}{err * 100:>8.1f}%")
+    print("\nper-network area efficiency (GOPS/mm^2), SPEED (Ara):")
+    for bits, vals in out["per_net"].items():
+        row = ", ".join(
+            f"{n}: {s:.1f}" + (f" ({a:.1f})" if a else "") for n, (s, a) in vals.items()
+        )
+        print(f"  {bits:>2}-bit  {row}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark harness: one section per paper table/figure + kernel microbench.
+
+Prints ``name,value,paper_value,rel_err`` CSV per reproduction row and
+``name,us_per_call,derived`` for the microbenchmarks.  Roofline tables come
+from the dry-run artifacts (python -m repro.launch.roofline), not this box's
+CPU walltime.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import fig3, fig4, kernel_bench, table1
+
+    print("# === Table I (SPEED vs Ara synthesized/peak) ===")
+    print("name,model,paper,rel_err")
+    for name, got, paper, err in table1.rows():
+        print(f"{name},{got:.3f},{paper:.3f},{err * 100:.1f}%")
+
+    print("\n# === Fig. 3 (GoogLeNet layer-wise dataflows, 16-bit) ===")
+    print("name,model,paper,rel_err")
+    for name, got, paper, err in fig3.rows():
+        print(f"{name},{got:.3f},{paper:.3f},{err * 100:.1f}%")
+    by_kernel = fig3.compute()["by_kernel"]
+    for k, cnt in sorted(by_kernel.items()):
+        print(f"fig3_selector_conv{k}x{k},{dict(cnt)}")
+
+    print("\n# === Fig. 4 (avg area efficiency across 4 DNNs) ===")
+    print("name,model,paper,rel_err")
+    for name, got, paper, err in fig4.rows():
+        print(f"{name},{got:.3f},{paper:.3f},{err * 100:.1f}%")
+
+    print("\n# === Kernel microbench (CPU XLA path; TPU perf => roofline) ===")
+    print("name,us_per_call,derived")
+    for name, us, derived in kernel_bench.rows():
+        print(f"{name},{us:.1f},{derived:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Table I reproduction: SPEED vs Ara synthesized/peak metrics.
+
+Peak = best conv layer across all four DNN benchmarks (the paper: "through
+evaluating each convolutional layer in all DNN benchmarks")."""
+from __future__ import annotations
+
+from repro.core.isa import Dataflow
+from repro.core.perfmodel import AraModel, SpeedModel
+from repro.core.precision import Precision
+from repro.models.cnn_zoo import BENCHMARK_NETWORKS
+
+PAPER = {  # (speed, ara) per metric/precision — Table I
+    ("throughput", 16): (34.89, 6.82),
+    ("throughput", 8): (93.65, 22.95),
+    ("throughput", 4): (287.41, None),
+    ("area_eff", 16): (31.72, 15.51),
+    ("area_eff", 8): (85.13, 52.16),
+    ("area_eff", 4): (261.28, None),
+    ("energy_eff", 16): (162.15, 111.61),
+    ("energy_eff", 8): (435.25, 373.68),
+    ("energy_eff", 4): (1335.79, None),
+}
+
+
+def compute(sm: SpeedModel | None = None, am: AraModel | None = None) -> dict:
+    sm, am = sm or SpeedModel(), am or AraModel()
+    layers = [l for f in BENCHMARK_NETWORKS.values() for l in f()]
+    out = {}
+    for bits in (16, 8, 4):
+        prec = Precision.from_bits(bits)
+        speed_peak = max(
+            max(
+                sm.evaluate(l, prec, Dataflow.FF).gops,
+                sm.evaluate(l, prec, Dataflow.CF).gops,
+            )
+            for l in layers
+        )
+        ara_peak = (
+            max(am.evaluate(l, prec).gops for l in layers) if bits != 4 else None
+        )
+        out[("throughput", bits)] = (speed_peak, ara_peak)
+        out[("area_eff", bits)] = (
+            speed_peak / sm.area_mm2,
+            ara_peak / am.area_mm2 if ara_peak else None,
+        )
+        out[("energy_eff", bits)] = (
+            speed_peak / sm.power_w,
+            ara_peak / am.power_w if ara_peak else None,
+        )
+    return out
+
+
+def rows() -> list[tuple]:
+    got = compute()
+    out = []
+    for key, (p_s, p_a) in PAPER.items():
+        g_s, g_a = got[key]
+        out.append((f"table1_{key[0]}_{key[1]}b_speed", g_s, p_s, g_s / p_s - 1))
+        if p_a is not None and g_a is not None:
+            out.append((f"table1_{key[0]}_{key[1]}b_ara", g_a, p_a, g_a / p_a - 1))
+    # headline derived ratios the abstract quotes
+    s16, a16 = got[("area_eff", 16)]
+    s8, a8 = got[("area_eff", 8)]
+    out.append(("table1_area_ratio_16b", s16 / a16, 2.04, s16 / a16 / 2.04 - 1))
+    out.append(("table1_area_ratio_8b", s8 / a8, 1.63, s8 / a8 / 1.63 - 1))
+    return out
+
+
+def main() -> None:
+    print(f"{'metric':<34}{'model':>10}{'paper':>10}{'rel_err':>9}")
+    for name, got, paper, err in rows():
+        print(f"{name:<34}{got:>10.2f}{paper:>10.2f}{err * 100:>8.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Architecture configs (one module per assigned arch) + input-shape registry."""
+from repro.configs.base import ArchConfig, get_config, list_archs
+from repro.configs.shapes import SHAPES, ShapeSpec, cells_for_arch
+
+__all__ = ["ArchConfig", "get_config", "list_archs", "SHAPES", "ShapeSpec", "cells_for_arch"]

@@ -1,0 +1,21 @@
+# SPEED's primary contribution as a composable JAX module: the multi-precision
+# ISA (isa), the systolic-array numerical model (sau), FF/CF dataflow mapping
+# (dataflow), the conv->program assembler + functional simulator (assembler,
+# interpreter), and the calibrated performance model (perfmodel).
+from repro.core.dataflow import ConvLayer, HardwareGeometry
+from repro.core.isa import VSACFG, VSALD, VSAM, Dataflow, decode, encode
+from repro.core.precision import Precision
+from repro.core.sau import SAU
+
+__all__ = [
+    "ConvLayer",
+    "HardwareGeometry",
+    "VSACFG",
+    "VSALD",
+    "VSAM",
+    "Dataflow",
+    "decode",
+    "encode",
+    "Precision",
+    "SAU",
+]

@@ -1,0 +1,114 @@
+"""Precision definitions for SPEED's multi-precision datapath.
+
+The paper (Sec. II-C) unifies multi-precision data representation by packing
+adjacent operands along the input-channel dimension into a fixed-width
+"unified element":
+
+    16-bit mode: 1 operand / element
+     8-bit mode: 4 operands / element
+     4-bit mode: 16 operands / element
+
+i.e. a unified element is always 16 bits x <lanes-per-element> wide in the
+VRF; what changes is how many (narrower) operands ride in it.  A PE holds
+sixteen 4-bit multipliers, dynamically combined into
+
+    1 x 16-bit MAC  |  4 x 8-bit MACs  |  16 x 4-bit MACs
+
+per cycle (Sec. II-B).  This module captures that geometry as data the rest
+of the stack (SAU model, dataflow cost model, Pallas kernels, quantized LM
+layers) shares.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+__all__ = [
+    "Precision",
+    "PrecisionSpec",
+    "PRECISION_SPECS",
+    "UNIFIED_ELEMENT_BITS",
+    "PE_MULTIPLIERS_4B",
+]
+
+# Width of a unified element in the VRF (Sec. II-C: "every adjacent 1, 4 and
+# 16 operands are combined into a unified element" under 16/8/4-bit modes).
+UNIFIED_ELEMENT_BITS = 16 * 16  # 256 bits: 1x16b at 16 ops.. see spec below
+# Each PE integrates sixteen 4-bit multipliers (Sec. II-B).
+PE_MULTIPLIERS_4B = 16
+
+
+class Precision(enum.IntEnum):
+    """Operand precisions supported by SPEED's datapath (paper: 4~16 bit)."""
+
+    INT4 = 4
+    INT8 = 8
+    INT16 = 16
+
+    @property
+    def spec(self) -> "PrecisionSpec":
+        return PRECISION_SPECS[self]
+
+    @classmethod
+    def from_bits(cls, bits: int) -> "Precision":
+        try:
+            return cls(bits)
+        except ValueError:
+            raise ValueError(
+                f"SPEED supports 4/8/16-bit operands, got {bits}-bit"
+            ) from None
+
+
+@dataclass(frozen=True)
+class PrecisionSpec:
+    """Static geometry of one precision mode.
+
+    Attributes:
+      bits:            operand width in bits.
+      ops_per_element: operands packed per unified element (paper Sec. II-C).
+      macs_per_pe:     MACs one PE performs per cycle in this mode; equals the
+                       number of ways the sixteen 4-bit multipliers combine.
+      digits:          number of 4-bit digits per operand (bit-split factor).
+      qmin/qmax:       signed integer range.
+    """
+
+    bits: int
+    ops_per_element: int
+    macs_per_pe: int
+    digits: int
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def ops_per_mac_cycle(self) -> int:
+        """Useful INT ops (mul+add = 2) per PE per cycle in this mode."""
+        return 2 * self.macs_per_pe
+
+
+PRECISION_SPECS: dict[Precision, PrecisionSpec] = {
+    # digits^2 * macs_per_pe == 16 four-bit multipliers, always fully used:
+    Precision.INT16: PrecisionSpec(bits=16, ops_per_element=1, macs_per_pe=1, digits=4),
+    Precision.INT8: PrecisionSpec(bits=8, ops_per_element=4, macs_per_pe=4, digits=2),
+    Precision.INT4: PrecisionSpec(bits=4, ops_per_element=16, macs_per_pe=16, digits=1),
+}
+
+
+def throughput_scale(precision: Precision) -> int:
+    """MAC-throughput multiplier of a PE relative to 16-bit mode."""
+    return precision.spec.macs_per_pe
+
+
+def sanity_check() -> None:
+    for p, s in PRECISION_SPECS.items():
+        assert s.digits * 4 == s.bits, (p, s)  # operands split into 4-bit digits
+        # sixteen 4-bit multipliers fully utilized in every mode:
+        assert s.digits * s.digits * s.macs_per_pe == PE_MULTIPLIERS_4B, (p, s)
+
+
+sanity_check()

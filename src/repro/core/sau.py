@@ -1,0 +1,153 @@
+"""Functional model of SPEED's multi-precision Systolic Array Unit (SAU).
+
+Paper Sec. II-B: each lane holds a parameterized ``TILE_R x TILE_C`` array of
+PEs; each PE contains sixteen 4-bit multipliers that dynamically combine into
+1x16-bit, 4x8-bit, or 16x4-bit MACs per cycle.  Three levels of parallelism:
+
+  * inside a PE  — input-channel dimension (the packed operands of a unified
+                   element are reduced inside the PE),
+  * across PE columns (TILE_C) — output-channel dimension,
+  * across PE rows (TILE_R, with TILE_H spatial positions) — feature-map
+    height dimension.
+
+This module is the *bit-accurate numerical model* of that fabric in JAX:
+
+  * :func:`digit_decompose` / :func:`digit_compose` — the radix-16 (4-bit
+    digit) split-and-combine identity the hardware uses to build wide
+    multiplies out of 4-bit multipliers,
+  * :func:`pe_multiply` — one PE's product built ONLY from 4-bit x 4-bit
+    partial products (what the sixteen multipliers physically compute),
+  * :class:`SAU` — the tile: a multi-precision matmul-accumulate over unified
+    elements, jit-able and used by core/interpreter.py as the execute stage
+    of VSAM instructions.
+
+Everything here is an *oracle* (plain jnp, no Pallas): kernels/mpmm.py is the
+TPU-performance implementation and is tested against the same math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PE_MULTIPLIERS_4B, Precision
+
+__all__ = ["digit_decompose", "digit_compose", "pe_multiply", "pe_mac", "SAU"]
+
+
+def digit_decompose(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Splits signed ``bits``-wide integers into radix-16 digits, little-endian.
+
+    Returns an int32 array with a trailing axis of ``bits // 4`` digits.  All
+    digits are the *unsigned* low nibbles except the top digit, which keeps the
+    sign — exactly the digit convention a two's-complement array multiplier
+    sees.  Invariant: ``sum_i digits[..., i] * 16**i == x``.
+    """
+    ndigits = bits // 4
+    x = jnp.asarray(x, jnp.int32)
+    digits = []
+    rem = x
+    for i in range(ndigits - 1):
+        d = rem & 0xF  # unsigned low nibble
+        digits.append(d)
+        rem = (rem - d) >> 4  # exact arithmetic shift after removing nibble
+    digits.append(rem)  # signed top digit
+    return jnp.stack(digits, axis=-1)
+
+
+def digit_compose(digits: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`digit_decompose` (last axis = digits)."""
+    ndigits = digits.shape[-1]
+    weights = 16 ** jnp.arange(ndigits, dtype=jnp.int32)
+    return jnp.sum(digits.astype(jnp.int32) * weights, axis=-1)
+
+
+def pe_multiply(a: jnp.ndarray, b: jnp.ndarray, precision: Precision) -> jnp.ndarray:
+    """Product of two signed ``precision``-bit operands computed the way a
+    SPEED PE does: as a sum of shifted 4-bit x 4-bit partial products.
+
+    With ``a = sum_i a_i 16^i`` and ``b = sum_j b_j 16^j``:
+        ``a*b = sum_{i,j} a_i b_j 16^{i+j}``
+    which needs ``digits**2`` of the sixteen 4-bit multipliers — 16 for 16-bit
+    (1 MAC/PE), 4 for 8-bit (4 MACs/PE), 1 for 4-bit (16 MACs/PE).
+    """
+    spec = precision.spec
+    da = digit_decompose(a, spec.bits)[..., :, None]  # [..., i, 1]
+    db = digit_decompose(b, spec.bits)[..., None, :]  # [..., 1, j]
+    partial = da * db  # 4b x 4b products (int32)
+    n = spec.digits
+    shift = 16 ** (jnp.arange(n, dtype=jnp.int32)[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :])
+    assert n * n * spec.macs_per_pe == PE_MULTIPLIERS_4B
+    # int32 throughout: every term and the result of a 16x16-bit multiply fit
+    # (and wraparound, if forced, matches the 32-bit accumulator semantics)
+    return jnp.sum(partial * shift, axis=(-2, -1))
+
+
+def pe_mac(acc: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, precision: Precision) -> jnp.ndarray:
+    """Multiply-accumulate into a 32-bit accumulator (hardware acc register)."""
+    prod = pe_multiply(a, b, precision)
+    return (acc.astype(jnp.int32) + prod.astype(jnp.int32)).astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class SAU:
+    """One lane's systolic array: TILE_R x TILE_C PEs.
+
+    ``__call__`` performs the matmul-accumulate a burst of VSAM instructions
+    maps onto the tile:
+
+        inputs  [R, K]  — R feature-map rows (TILE_H positions), K reduced
+                           operands (input-channel dim, PE-internal parallel)
+        weights [K, C]  — C output channels across PE columns
+        acc     [R, C]  — int32 accumulators
+
+    K is reduced ``ops_per_element`` at a time per cycle (a unified element per
+    PE per cycle); the cycle count model lives in core/perfmodel.py.
+    """
+
+    tile_r: int = 4
+    tile_c: int = 4
+
+    def __call__(
+        self,
+        acc: jnp.ndarray,
+        inputs: jnp.ndarray,
+        weights: jnp.ndarray,
+        precision: Precision,
+        *,
+        bit_accurate: bool = False,
+    ) -> jnp.ndarray:
+        if inputs.ndim != 2 or weights.ndim != 2:
+            raise ValueError("SAU operates on [R,K] x [K,C]")
+        r, k = inputs.shape
+        k2, c = weights.shape
+        if k != k2:
+            raise ValueError(f"reduction mismatch {k} vs {k2}")
+        if r > self.tile_r or c > self.tile_c:
+            raise ValueError(
+                f"operands [{r},{k}]x[{k},{c}] exceed tile {self.tile_r}x{self.tile_c}"
+            )
+        if bit_accurate:
+            # Build every product from 4-bit partial products (slow oracle).
+            prod = pe_multiply(inputs[:, :, None], weights[None, :, :], precision)
+            out = jnp.sum(prod, axis=1)
+        else:
+            out = jnp.einsum(
+                "rk,kc->rc",
+                inputs.astype(jnp.int32),
+                weights.astype(jnp.int32),
+                preferred_element_type=jnp.int32,
+            )
+        return (acc.astype(jnp.int32) + out.astype(jnp.int32)).astype(jnp.int32)
+
+    def cycles(self, r: int, c: int, k_elements: int, precision: Precision) -> int:
+        """Cycles to reduce ``k_elements`` unified elements over an [r,c] facet
+        (systolic fill/drain + one element per cycle)."""
+        del precision  # element throughput is precision-independent by design
+        import math
+
+        r_tiles = math.ceil(r / self.tile_r)
+        c_tiles = math.ceil(c / self.tile_c)
+        fill_drain = self.tile_r + self.tile_c - 2
+        return r_tiles * c_tiles * (k_elements + fill_drain)

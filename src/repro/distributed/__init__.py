@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, compressed collectives, pipeline
+parallelism, elastic resharding, fault tolerance."""

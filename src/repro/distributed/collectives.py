@@ -1,0 +1,138 @@
+"""Distributed-optimization collectives.
+
+int8 gradient compression with error feedback — the paper's multi-precision
+idea applied to the data-parallel gradient reduction:
+
+    1. residual-corrected gradient  g' = g + e   (error feedback state e)
+    2. blockwise int8 quantize (per-chunk fp32 scales)
+    3. reduce-scatter expressed as all_to_all of int8 chunks (bytes on the
+       wire are 1/4 of fp32) + local fp32 reduction of the received chunks
+    4. int8 all-gather of each shard's reduced chunk
+    5. e <- g' - dequant(result)   (what compression lost, fed back next step)
+
+Under shard_map over the data axis; the model axis (TP) gradients are exact
+(XLA's own psum).  Convergence impact is bounded by the error-feedback
+theorem (Karimireddy et al. 2019); tests assert byte counts and allclose-
+with-tolerance vs the exact psum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+_CHUNK = 1024
+
+
+def _quantize_chunks(x: jnp.ndarray, n_shards: int):
+    """flat fp32 [n] -> (int8 [n_shards, m], scales [n_shards, m//CHUNK, 1])."""
+    n = x.shape[0]
+    per = -(-n // n_shards)
+    per = per + (-per) % _CHUNK
+    xp = jnp.pad(x, (0, n_shards * per - n)).reshape(n_shards, per // _CHUNK, _CHUNK)
+    scale = jnp.maximum(jnp.max(jnp.abs(xp), axis=-1, keepdims=True), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_chunks(q: jnp.ndarray, scale: jnp.ndarray, n: int) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+
+
+def compressed_psum_mean(
+    x: jnp.ndarray, axis: str, e2: jnp.ndarray | None = None
+) -> jnp.ndarray | tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean-reduce `x` over mesh axis `axis` with int8 wire traffic.
+
+    Call INSIDE shard_map.  Implements reduce-scatter (all_to_all of int8
+    chunks + local fp32 sum) followed by an int8 all-gather.
+
+    ``e2`` is the error-feedback state of the SECOND quantization stage (the
+    owner shard's reduced chunk): pass the previous call's returned residual
+    and both stages telescope — the cumulative reduced sum then deviates from
+    the exact sum by at most one quantization step, not O(T) (see
+    tests/test_collectives.py).  With e2 given, returns (mean, e1_residual,
+    e2_residual): add e1_residual to next round's x.  When e2 is None only
+    the value is returned (residuals dropped; fine for one-shot reductions).
+    """
+    n_shards = jax.lax.axis_size(axis)
+    shape, n = x.shape, x.size
+    flat = x.reshape(-1).astype(jnp.float32)
+    q, scale = _quantize_chunks(flat, n_shards)  # [S, m/C, C] int8
+    # stage-1 residual: what MY local quantization lost (the EF state the
+    # caller must add back next round — NOT x minus the final mean)
+    e1_new = (flat - _dequantize_chunks(q, scale, n)).reshape(shape)
+    # reduce-scatter: shard i collects chunk i from every peer
+    q_t = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0, tiled=False)
+    s_t = jax.lax.all_to_all(scale, axis, split_axis=0, concat_axis=0, tiled=False)
+    # local fp32 reduction of my chunk across peers
+    mine = jnp.sum(q_t.astype(jnp.float32) * s_t, axis=0) / n_shards  # [m/C, C]
+    if e2 is not None:
+        mine = mine + e2
+    # re-quantize my reduced chunk and all-gather int8
+    sc2 = jnp.maximum(jnp.max(jnp.abs(mine), axis=-1, keepdims=True), 1e-30) / 127.0
+    q2 = jnp.clip(jnp.round(mine / sc2), -127, 127).astype(jnp.int8)
+    e2_new = mine - q2.astype(jnp.float32) * sc2
+    qg = jax.lax.all_gather(q2, axis, axis=0, tiled=False)  # [S, m/C, C]
+    sg = jax.lax.all_gather(sc2.astype(jnp.float32), axis, axis=0, tiled=False)
+    red = _dequantize_chunks(qg, sg, n).reshape(shape)
+    if e2 is not None:
+        return red, e1_new, e2_new
+    return red
+
+
+def compressed_grad_reduce(
+    grads: Any,
+    error: Any,
+    mesh: Mesh,
+    data_axes: tuple[str, ...] = ("data",),
+) -> tuple[Any, Any]:
+    """Error-feedback int8 mean-reduction of a gradient pytree over the data
+    axes.  grads are per-shard (unreduced); returns (reduced grads, new error
+    state).  Leaves smaller than one chunk reduce exactly (fp32 psum)."""
+    axis = data_axes[0] if len(data_axes) == 1 else data_axes
+
+    def local(g_tree, e_tree):
+        def one(g, e):
+            e1, e2 = e["e1"], e["e2"]
+            gf = g.astype(jnp.float32) + e1
+            if g.size < _CHUNK:  # tiny leaves: exact
+                red = jax.lax.pmean(gf, axis)
+                return red.astype(g.dtype), {"e1": jnp.zeros_like(gf), "e2": e2}
+            red, e1n, e2n = compressed_psum_mean(
+                gf, axis if isinstance(axis, str) else axis[0], e2
+            )
+            return red.astype(g.dtype), {"e1": e1n, "e2": e2n}
+
+        flat_g, tdef = jax.tree_util.tree_flatten(g_tree)
+        flat_e = tdef.flatten_up_to(e_tree)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (
+            jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs]),
+            jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs]),
+        )
+
+    spec = jax.tree.map(lambda _: P(), grads)  # grads replicated per data shard
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=(spec, spec),
+        check_rep=False,
+    )(grads, error)
+
+
+def init_error_state(grads_proto: Any, n_shards: int = 1) -> Any:
+    def one(g):
+        per = -(-g.size // n_shards)
+        per = per + (-per) % _CHUNK
+        return {
+            "e1": jnp.zeros(g.shape, jnp.float32),
+            "e2": jnp.zeros((per // _CHUNK, _CHUNK), jnp.float32),
+        }
+    return jax.tree.map(one, grads_proto)

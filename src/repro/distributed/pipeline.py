@@ -1,0 +1,94 @@
+"""Pipeline parallelism over the ``pod`` mesh axis (GPipe-style).
+
+The production mesh exposes ``pod`` as an outer axis; by default it composes
+as data parallelism, but cross-pod data-parallel gradient sync moves every
+parameter every step over the slower inter-pod links.  For deep models an
+alternative is to place CONSECUTIVE LAYER STAGES on pods and stream
+microbatches through with jax.lax.ppermute — inter-pod traffic becomes
+activations (B_micro x S x D per step boundary), often orders of magnitude
+smaller than the parameter gradients.
+
+Implementation: shard_map over ('pod',); each pod holds its stage's stacked
+layer params ([L/pods, ...]).  The classic loop runs n_micro + n_stages - 1
+ticks; at each tick a stage processes the microbatch it received last tick
+and ppermutes its output forward.  Bubble fraction = (S-1)/(M+S-1).
+
+This module implements *inference/forward* pipelining generically (any
+per-stage apply function) plus a pipelined train-forward used by the tests
+to verify exactness vs the unpipelined reference; integrating full pipelined
+backward into the main trainer is intentionally left switchable (the dry-run
+meshes default to pod=DP) — see DESIGN.md 'Distribution design'.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(
+    stage_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    stage_params: jnp.ndarray,  # pytree, leading dim = n_stages (sharded on pod)
+    x: jnp.ndarray,  # [n_micro, B_micro, ...] microbatched input
+    mesh: Mesh,
+    axis: str = "pod",
+):
+    """Runs x through n_stages sequential stages, pipelined over `axis`.
+
+    stage_fn(params_for_stage, microbatch) -> microbatch (same shape).
+    Returns [n_micro, B_micro, ...] outputs (as produced by the LAST stage).
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x.shape[0]
+
+    def local(params_stage, xs):
+        # params_stage: this pod's stage params (leading stage dim squeezed)
+        # xs: this pod's copy of ALL microbatches (replicated input)
+        stage = jax.lax.axis_index(axis)
+        p = jax.tree.map(lambda a: a[0], params_stage)
+
+        n_ticks = n_micro + n_stages - 1
+        buf = jnp.zeros_like(xs[0])  # the microbatch currently held
+        outs = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 injects microbatch t; others use what arrived last tick
+            inject = jnp.where(t < n_micro, t, 0)
+            x_in = jnp.where(stage == 0, xs[inject], buf)
+            y = stage_fn(p, x_in)
+            # collect finished microbatches at the last stage:
+            m_idx = t - (n_stages - 1)
+            is_out = (stage == n_stages - 1) & (m_idx >= 0)
+            outs = jax.lax.cond(
+                is_out,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(m_idx, 0), 0
+                ),
+                lambda o: o,
+                outs,
+            )
+            # forward y to the next stage
+            buf_next = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            )
+            return (buf_next, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(n_ticks))
+        # only the last stage holds real outputs (zeros elsewhere): a psum
+        # broadcasts them to every pod (ppermute requires unique sources)
+        outs = jax.lax.psum(outs, axis) if n_stages > 1 else outs
+        return outs
+
+    params_spec = jax.tree.map(lambda _: P(axis), stage_params)
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(params_spec, P()),
+        out_specs=P(),
+        check_rep=False,
+    )(stage_params, x)

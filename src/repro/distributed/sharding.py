@@ -1,0 +1,229 @@
+"""Sharding rules: parameter-name patterns -> PartitionSpec, activation
+constraints, and the mesh context the model code consults.
+
+Axis conventions (launch/mesh.py):
+  single pod:  (data=16, model=16)            axes ("data", "model")
+  multi-pod:   (pod=2, data=16, model=16)     axes ("pod", "data", "model")
+The ``pod`` axis composes as outer data parallelism by default (optionally a
+pipeline axis — distributed/pipeline.py).  Batch shards over BATCH_AXES =
+("pod", "data") when present; tensor/expert parallelism over "model".
+
+Model code calls :func:`shard` (activations) and the launcher materializes
+parameter shardings from :func:`param_spec` (name-pattern rules).  When no
+mesh context is active (unit tests, single device) everything degrades to
+no-ops so the model runs unmodified on CPU.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+_DATA_ONLY = False  # FSDP/ZeRO mapping: every mesh axis is a batch axis
+
+
+def set_mesh(mesh: Optional[Mesh], data_only: bool = False) -> None:
+    """Installs the mesh the model's activation constraints resolve against.
+
+    data_only=True selects the FSDP/ZeRO-3 mapping: the batch shards over ALL
+    mesh axes and no tensor parallelism is requested — weights stay 2-D
+    sharded (the param rules) and XLA gathers them layer-by-layer, which for
+    small-dense models replaces O(layers x activation) TP all-reduces with
+    O(params) weight all-gathers (hillclimb #1 in EXPERIMENTS.md §Perf).
+    """
+    global _ACTIVE_MESH, _DATA_ONLY
+    _ACTIVE_MESH = mesh
+    _DATA_ONLY = data_only
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def batch_axes() -> tuple[str, ...]:
+    if _ACTIVE_MESH is None:
+        return ()
+    if _DATA_ONLY:
+        return tuple(_ACTIVE_MESH.axis_names)
+    return tuple(a for a in ("pod", "data") if a in _ACTIVE_MESH.axis_names)
+
+
+def model_axis() -> Optional[str]:
+    if _ACTIVE_MESH is None or _DATA_ONLY:
+        return None
+    if "model" in _ACTIVE_MESH.axis_names:
+        return "model"
+    return None
+
+
+def gather_weight(w):
+    """Under the FSDP/ZeRO-3 mapping, explicitly materialize the replicated
+    weight from its shards BEFORE any dtype conversion: the all-gather then
+    moves bf16/int8 payloads (not f32 converts — 2-4x wire savings), and the
+    constraint's transpose turns weight-grad all-reduces into
+    reduce-scatters to the param shards (§Perf hillclimb #1b)."""
+    if _ACTIVE_MESH is None or not _DATA_ONLY:
+        return w
+    if isinstance(w, dict):  # quantized payload
+        out = dict(w)
+        for k in ("data", "scale"):
+            if k in out:
+                out[k] = jax.lax.with_sharding_constraint(
+                    out[k], NamedSharding(_ACTIVE_MESH, P(*([None] * out[k].ndim)))
+                )
+        return out
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(_ACTIVE_MESH, P(*([None] * w.ndim)))
+    )
+
+
+def shard(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """with_sharding_constraint under the active mesh; no-op otherwise.
+
+    spec entries: "batch" (expands to the batch axes tuple), "model", or None.
+    """
+    if _ACTIVE_MESH is None:
+        return x
+    resolved = []
+    for s in spec:
+        if s == "batch":
+            ax = batch_axes()
+            resolved.append(ax if ax else None)
+        elif s == "model":
+            resolved.append(model_axis())
+        else:
+            resolved.append(s)
+    p = validate_spec(P(*resolved), x.shape, _ACTIVE_MESH)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_ACTIVE_MESH, p))
+
+
+# --------------------------------------------------------------- parameters
+# Pattern rules, first match wins; each pattern lists CANDIDATE specs and the
+# first (after divisibility validation) with the largest sharding factor wins.
+# Weights shard 2-D: tensor-parallel over "model" AND FSDP/ZeRO-style over
+# "data" (grads + optimizer states inherit the same specs), which is what
+# keeps 1e12-parameter states inside 16 GB/chip.  Stacked layer params get a
+# leading None automatically.
+_RULES: list[tuple[str, list[tuple] | None]] = [
+    (r"(^|/)embed$", [("model", "data")]),  # [V, D]
+    (r"unembed$", [("data", "model")]),  # [D, V]
+    (r"(wq|wk|wv)$", [("data", "model")]),  # [D, H*hd]
+    (r"wo$", [("model", "data")]),  # [H*hd, D]
+    (r"router$", [(None, None)]),  # small, replicated
+    # MoE experts [E, D, F] / [E, F, D]: experts over model when divisible,
+    # otherwise fall back to sharding the matrix dims (mixtral has E=8 < 16)
+    (r"moe/(wg|wu|wd)$", [("model", "data", None), (None, "data", "model")]),
+    (r"mlp/(wg|wu)$", [("data", "model")]),  # [D, F]
+    (r"mlp/wd$", [("model", "data")]),  # [F, D]
+    (r"in_proj$", [("data", "model")]),  # ssm fused proj (d_inner sharded)
+    (r"out_proj$", [("model", "data")]),
+    (r"(A_log|D|dt_bias)$", [(None,)]),  # tiny per-head vectors: replicated
+    (r"(norm|norm1|norm2|final_norm|gamma)$", [(None,)]),
+    (r"(data|scale|bits)$", None),  # quantized leaves: rule resolved by parent
+]
+
+
+def _pad_spec(spec: tuple, ndim: int) -> tuple:
+    if len(spec) < ndim:  # stacked layers: leading layer dims replicate
+        return (None,) * (ndim - len(spec)) + spec
+    if len(spec) > ndim:  # e.g. packed/quantized lost a dim: trim
+        return spec[-ndim:] if ndim else ()
+    return spec
+
+
+def _shard_factor(spec: P, mesh: Mesh) -> int:
+    f = 1
+    for ax in spec:
+        if ax is None:
+            continue
+        for a in (ax,) if isinstance(ax, str) else ax:
+            f *= mesh.shape[a]
+    return f
+
+
+def param_spec(path: str, ndim: int, shape=None, mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for a parameter at `path`.  With shape+mesh, candidates
+    are validated for divisibility and the most-sharded survivor wins."""
+    for pat, candidates in _RULES:
+        if candidates is None:
+            continue
+        if re.search(pat, path):
+            specs = [P(*_pad_spec(tuple(c), ndim)) for c in candidates]
+            if shape is None or mesh is None:
+                return specs[0]
+            validated = [validate_spec(s, shape, mesh) for s in specs]
+            return max(validated, key=lambda s: _shard_factor(s, mesh))
+    return P(*([None] * ndim))
+
+
+def _iter_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_paths(v, f"{prefix}/{k}" if prefix else str(k))
+    else:
+        yield prefix, tree
+
+
+def validate_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drops mesh axes from dims they don't divide (e.g. fused projections
+    whose output dim is not a multiple of the model-parallel degree) and
+    axes absent from the mesh (e.g. "pod" on a single-pod mesh)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = tuple(
+            a for a in ((ax,) if isinstance(ax, str) else tuple(ax))
+            if a in mesh.axis_names
+        )
+        if not axes:
+            out.append(None)
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        ax_out = axes[0] if len(axes) == 1 else axes
+        out.append(ax_out if dim % size == 0 else None)
+    return P(*out)
+
+
+def tree_shardings(params, mesh: Mesh):
+    """NamedSharding pytree matching `params` via the pattern rules."""
+
+    def one(path: str, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        shape = getattr(leaf, "shape", None)
+        # quantized dicts: the leaf names are data/scale/bits under the
+        # original weight name — reuse the parent rule for `data`.
+        if path.endswith(("/data", "/scale")):
+            # parent rule; size-1 dims (the scale's reduced K axis) drop in
+            # validation automatically
+            spec = param_spec(path.rsplit("/", 1)[0], nd, shape, mesh)
+        elif path.endswith("/bits"):
+            spec = P()
+        else:
+            spec = param_spec(path, nd, shape, mesh)
+        if shape is not None:
+            spec = validate_spec(spec, shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    paths = dict(_iter_paths(params))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+
+    def path_str(kp):
+        parts = []
+        for e in kp:
+            if hasattr(e, "key"):
+                parts.append(str(e.key))
+            elif hasattr(e, "idx"):
+                parts.append(str(e.idx))
+        return "/".join(parts)
+
+    leaves = [one(path_str(kp), leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

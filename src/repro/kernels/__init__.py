@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+wrapped by ops.py (jit, padding, dataflow selection, platform dispatch) and
+pinned to ref.py (pure-jnp oracle) by tests/test_kernels_*.py in interpret
+mode (CPU executes the kernel body; TPU is the lowering target).
+"""

@@ -1,0 +1,267 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle what the raw kernels don't: padding to block multiples, block
+size selection, FF/CF dataflow selection (via the same core.dataflow selector
+the conv mapper uses — a matmul is a 1x1 conv), weight packing/quantization,
+KV-cache quantization, and platform dispatch (Pallas interpret mode on CPU,
+compiled on TPU; an XLA-native fallback is available for A/B tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataflow import ConvLayer
+from repro.core.isa import Dataflow
+from repro.core.precision import Precision
+from repro.kernels import mpmm as mpmm_mod
+from repro.kernels import mqa_decode as dec_mod
+from repro.kernels import ref as ref_mod
+from repro.quant.pack import pack_int4
+
+__all__ = [
+    "pack_weights",
+    "mpmm",
+    "select_matmul_dataflow",
+    "mpconv",
+    "quantize_kv",
+    "mqa_decode",
+]
+
+_INT_DTYPE = {4: jnp.int8, 8: jnp.int8, 16: jnp.int16}
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack_weights(w: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-channel symmetric quantization of a [K, N] weight matrix.
+
+    Returns (w_data, w_scale): w_data is [K, N] int8/int16, or [K//2, N] int8
+    with two K-consecutive nibbles per byte when bits == 4 (SPEED's unified
+    elements along the reduction dim); w_scale is [1, N] f32.
+    """
+    prec = Precision.from_bits(bits)
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=0, keepdims=True), 1e-30)
+    scale = (amax / prec.spec.qmax).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w / scale), prec.spec.qmin, prec.spec.qmax)
+    q = q.astype(_INT_DTYPE[bits])
+    if bits == 4:
+        q = pack_int4(q, axis=0)
+    return q, scale
+
+
+def select_matmul_dataflow(m: int, n: int, k: int) -> Dataflow:
+    """FF/CF selection for a matmul via the conv cost model (1x1 conv with
+    cin=k, cout=n, h*w=m)."""
+    from repro.core.perfmodel import select_dataflow
+
+    hw = int(np.sqrt(max(m, 1))) or 1
+    layer = ConvLayer("mm", cin=k, cout=n, k=1, h=hw, w=max(m // hw, 1))
+    return select_dataflow(layer, Precision.INT8)
+
+
+def _pad_to(x: jnp.ndarray, mult: tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, (-s) % m_) for s, m_ in zip(x.shape, mult)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def _pick_blocks(m: int, n: int, k: int, kpack: int) -> tuple[int, int, int]:
+    def shrink(target: int, size: int, align: int) -> int:
+        b = min(target, max(align, 1 << (size - 1).bit_length()))
+        return max(align, min(b, target))
+
+    bm = shrink(128, m, 8)
+    bn = shrink(128, n, 128) if n >= 128 else 128
+    bk = shrink(512, k, 128 * kpack)
+    return bm, bn, bk
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("w_bits", "x_bits", "mode", "dataflow", "backend", "interpret"),
+)
+def mpmm(
+    x: jnp.ndarray,
+    w_data: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    *,
+    w_bits: int,
+    x_bits: int = 16,
+    mode: Literal["int", "dequant"] = "dequant",
+    dataflow: Literal["ff", "cf", "auto"] = "cf",
+    backend: Literal["pallas", "xla"] = "pallas",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Multi-precision matmul: x [..., K] @ dequant(w) -> [..., N].
+
+    int mode returns f32 = int32_acc * w_scale (int arithmetic inside);
+    dequant mode returns x.dtype.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if mode == "dequant" and w_bits == 16:
+        raise ValueError("w16 requires int mode (bf16 cannot hold int16 exactly)")
+    lead = x.shape[:-1]
+    k_sz = x.shape[-1]
+    kpack = 2 if w_bits == 4 else 1
+    n_sz = w_data.shape[-1]
+    x2 = x.reshape(-1, k_sz)
+    m_sz = x2.shape[0]
+
+    if dataflow == "auto":
+        dataflow = (
+            "ff" if select_matmul_dataflow(m_sz, n_sz, k_sz) is Dataflow.FF else "cf"
+        )
+
+    if backend == "xla":
+        out = ref_mod.mpmm_ref(x2, w_data, w_scale, w_bits=w_bits, mode=mode)
+        if mode == "int":
+            out = out.astype(jnp.float32) * w_scale.astype(jnp.float32)
+        return out.reshape(*lead, n_sz)
+
+    bm, bn, bk = _pick_blocks(m_sz, n_sz, k_sz, kpack)
+    xp = _pad_to(x2, (bm, bk))
+    wp = _pad_to(w_data, (bk // kpack, bn))
+    sp = _pad_to(w_scale.reshape(1, -1), (1, bn))
+    out = mpmm_mod.mpmm_pallas(
+        xp,
+        wp,
+        sp,
+        w_bits=w_bits,
+        x_bits=x_bits,
+        mode=mode,
+        dataflow=dataflow,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        interpret=interpret,
+    )
+    out = out[:m_sz, :n_sz]
+    if mode == "int":
+        out = out.astype(jnp.float32) * w_scale.astype(jnp.float32)
+    elif dataflow == "ff":
+        out = (out * w_scale.astype(out.dtype)).astype(x.dtype)
+    return out.reshape(*lead, n_sz)
+
+
+def mpconv(
+    x: jnp.ndarray,  # [N, H, W, Cin]
+    w_data: jnp.ndarray,  # packed [K*K*Cin (/2), Cout]
+    w_scale: jnp.ndarray,  # [1, Cout]
+    *,
+    w_bits: int,
+    ksize: int,
+    stride: int = 1,
+    padding: int = 0,
+    mode: Literal["int", "dequant"] = "dequant",
+    dataflow: Literal["ff", "cf", "auto"] = "auto",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Multi-precision convolution = patch extraction + the mpmm kernel.
+
+    On the TPU a direct convolution is executed by the MXU as an implicit
+    matmul anyway; the FF/CF dataflow choice survives as the contraction loop
+    order of the matmul core (see kernels/mpmm.py docstring).  The dataflow
+    selector receives the true conv geometry.
+    """
+    n, h, w, cin = x.shape
+    cout = w_data.shape[-1]
+    if dataflow == "auto":
+        from repro.core.perfmodel import select_dataflow
+
+        layer = ConvLayer("conv", cin=cin, cout=cout, k=ksize, h=h, w=w,
+                          stride=stride, padding=padding)
+        df = select_dataflow(layer, Precision.from_bits(w_bits))
+        dataflow = "ff" if df is Dataflow.FF else "cf"
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(ksize, ksize),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [N, Ho, Wo, Cin*K*K] with feature order (cin, kh, kw)
+    ho, wo = patches.shape[1], patches.shape[2]
+    out = mpmm(
+        patches.reshape(-1, patches.shape[-1]),
+        w_data,
+        w_scale,
+        w_bits=w_bits,
+        x_bits=16 if mode == "int" else 16,
+        mode=mode,
+        dataflow=dataflow,
+        interpret=interpret,
+    )
+    return out.reshape(n, ho, wo, cout)
+
+
+def conv_pack_weights(w: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[Kh, Kw, Cin, Cout] float -> packed ([Cin*Kh*Kw (/2), Cout], [1, Cout])
+    matching conv_general_dilated_patches' (cin, kh, kw) feature order."""
+    kh, kw, cin, cout = w.shape
+    wm = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+    return pack_weights(wm, bits)
+
+
+def quantize_kv(
+    kv: jnp.ndarray, bits: int = 8
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[B, S, Hkv, D] float -> (int8 payload [B,S,Hkv,D or D//2], scale
+    [B,S,Hkv,1]) — per-(token, head) symmetric scales."""
+    prec = Precision.from_bits(bits)
+    amax = jnp.maximum(jnp.max(jnp.abs(kv), axis=-1, keepdims=True), 1e-30)
+    scale = (amax / prec.spec.qmax).astype(jnp.float32)
+    q = jnp.clip(jnp.round(kv / scale), prec.spec.qmin, prec.spec.qmax).astype(jnp.int8)
+    if bits == 4:
+        q = pack_int4(q, axis=-1)
+    return q, scale
+
+
+@functools.partial(jax.jit, static_argnames=("kv_bits", "bs", "interpret"))
+def mqa_decode(
+    q: jnp.ndarray,  # [B, H, D]
+    k_data: jnp.ndarray,
+    v_data: jnp.ndarray,
+    k_scale: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    kv_bits: int = 8,
+    bs: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Single-token GQA attention against an int8/int4 KV cache."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, h, d = q.shape
+    s, hkv = k_data.shape[1], k_data.shape[2]
+    bs = min(bs, s)
+    if s % bs:
+        pad = (-s) % bs
+        k_data = jnp.pad(k_data, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_data = jnp.pad(v_data, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = q.reshape(b, hkv, h // hkv, d)
+    out = dec_mod.mqa_decode_pallas(
+        qg,
+        k_data,
+        v_data,
+        k_scale,
+        v_scale,
+        lengths.astype(jnp.int32),
+        kv_bits=kv_bits,
+        sm_scale=1.0 / float(np.sqrt(d)),
+        bs=bs,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, d)

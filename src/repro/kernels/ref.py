@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel (no pallas imports).
+
+Each oracle defines the exact semantics its kernel must reproduce; the tests
+sweep shapes/dtypes/precisions and assert allclose (bit-exact for the integer
+paths) against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mpmm_ref", "mpconv_ref", "mqa_decode_ref"]
+
+
+def _unpack_w4_k(packed: jnp.ndarray) -> jnp.ndarray:
+    lo = (packed << 4) >> 4
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=1).reshape(packed.shape[0] * 2, packed.shape[1])
+
+
+def mpmm_ref(
+    x: jnp.ndarray,
+    w_data: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    *,
+    w_bits: int,
+    mode: str = "dequant",
+) -> jnp.ndarray:
+    """Oracle for kernels/mpmm.py.
+
+    int mode: exact int32 (wraparound mod 2^32, like the 32-bit SAU
+    accumulators) WITHOUT scaling — the wrapper scales.
+    dequant mode: float matmul of x against dequantized weights, f32 accum,
+    per-column scale applied.
+    """
+    w = _unpack_w4_k(w_data) if w_bits == 4 else w_data
+    if mode == "int":
+        # int32 accumulation: wraparound mod 2^32, exactly the kernel's (and
+        # the 32-bit SAU accumulator's) semantics.
+        acc = jax.lax.dot_general(
+            x.astype(jnp.int32),
+            w.astype(jnp.int32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        return acc
+    acc = jax.lax.dot_general(
+        x,
+        w.astype(x.dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return (acc * w_scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mpconv_ref(
+    x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1, padding: int = 0
+) -> jnp.ndarray:
+    """NHWC x HWIO integer/float conv oracle (lax.conv in f32/int32)."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        out = jax.lax.conv_general_dilated(
+            x.astype(jnp.int32),
+            w.astype(jnp.int32),
+            (stride, stride),
+            [(padding, padding), (padding, padding)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32,
+        )
+        return out
+    return jax.lax.conv_general_dilated(
+        x,
+        w.astype(x.dtype),
+        (stride, stride),
+        [(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def mqa_decode_ref(
+    q: jnp.ndarray,
+    k_data: jnp.ndarray,
+    v_data: jnp.ndarray,
+    k_scale: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    sm_scale: float,
+) -> jnp.ndarray:
+    """Oracle for kernels/mqa_decode.py — single-token GQA attention over a
+    quantized KV cache.
+
+    q:        [B, H, D]            (bf16/f32)
+    k_data:   [B, S, Hkv, D] int8  (quantized keys)
+    v_data:   [B, S, Hkv, D] int8
+    k_scale:  [B, S, Hkv, 1] f32   (per-token-per-head scales)
+    v_scale:  [B, S, Hkv, 1] f32
+    lengths:  [B] int32 — valid cache length per sequence (masking)
+    returns:  [B, H, D] in q.dtype
+    """
+    b, h, d = q.shape
+    s, hkv = k_data.shape[1], k_data.shape[2]
+    groups = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, groups, d)
+    kf = k_data.astype(jnp.float32) * k_scale.astype(jnp.float32)
+    vf = v_data.astype(jnp.float32) * v_scale.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, kf) * sm_scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]  # [B, S]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

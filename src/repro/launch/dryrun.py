@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analyses for §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+
+Outputs one JSON per cell under experiments/dryrun/ (cached; --force to
+redo).  The compile itself is the test: sharding mismatches, non-divisible
+dimensions, or unsupported collectives fail here, not on the pod.
+
+(no ``from __future__ import annotations`` here: the XLA_FLAGS lines must
+stay the first statements in the file.)
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, cells_for_arch, get_config, list_archs
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.data.pipeline import DataConfig, batch_specs
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as model_lib
+from repro.train.trainer import TrainConfig, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+# ------------------------------------------------------------- input specs --
+def input_specs(arch: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    if shape.kind == "train":
+        dc = DataConfig(arch.vocab, shape.seq_len, shape.global_batch)
+        return batch_specs(dc, arch)
+    if shape.kind == "prefill":
+        dc = DataConfig(arch.vocab, shape.seq_len - arch.prefix_len, shape.global_batch)
+        specs = batch_specs(dc, arch)
+        specs.pop("labels")
+        return specs
+    # decode: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def _axis_size(mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    out = 1
+    for n in names:
+        out *= mesh.shape[n]
+    return out
+
+
+def batch_sharding_spec(mesh, batch: int, data_only: bool = False):
+    if data_only:
+        ba = tuple(mesh.axis_names)
+        if _div(batch, _axis_size(mesh, ba)):
+            return ba
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if ba and _div(batch, _axis_size(mesh, ba)):
+        return ba
+    # try data alone
+    if "data" in mesh.axis_names and _div(batch, mesh.shape["data"]):
+        return ("data",)
+    return None
+
+
+def cache_specs(arch: ArchConfig, shape: ShapeSpec, mesh) -> tuple[dict, dict]:
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the decode cache."""
+    cache = jax.eval_shape(
+        partial(model_lib.init_cache, arch, shape.global_batch, shape.seq_len)
+    )
+    ba = batch_sharding_spec(mesh, shape.global_batch)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    specs = {}
+    for name, leaf in cache.items():
+        if name == "pos":
+            specs[name] = P()
+        elif name in ("k", "v", "k_scale", "v_scale"):
+            # [L(or groups), B, S, kv, hd(or 1)]
+            s_dim = leaf.shape[2]
+            if ba is not None:
+                seq_ax = model_ax if _div(s_dim, _axis_size(mesh, model_ax)) else None
+                specs[name] = P(None, ba, seq_ax, None, None)
+            else:  # long-context batch=1: shard the sequence over everything
+                all_ax = tuple(a for a in mesh.axis_names)
+                seq_ax = all_ax if _div(s_dim, _axis_size(mesh, all_ax)) else (
+                    model_ax if _div(s_dim, _axis_size(mesh, model_ax)) else None
+                )
+                specs[name] = P(None, None, seq_ax, None, None)
+        elif name.startswith("ssm"):
+            # [L, B, H, P, N]
+            h = leaf.shape[2]
+            h_ax = model_ax if _div(h, _axis_size(mesh, model_ax)) else None
+            specs[name] = P(None, ba, h_ax, None, None)
+        else:
+            specs[name] = P(*([None] * leaf.ndim))
+    return cache, specs
+
+
+def _spec_tree_to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# -------------------------------------------------------- collective bytes --
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict[str, float]:
+    """Sums output-operand bytes of every collective op in the optimized
+    (post-SPMD, per-device) HLO.  Wire-cost weighting per op type uses the
+    standard ring formulas; shapes are per-device."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        ls = line.lstrip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s*((?:[\w\-]+)\()", ls)
+        if not m:
+            continue
+        op = m.group(2)[:-1]
+        name = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                name = c
+                break
+        if name is None:
+            continue
+        if op.endswith("-done"):
+            continue  # avoid double counting start/done pairs
+        ty = m.group(1)
+        bytes_ = 0.0
+        for dt, dims in _SHAPE_RE.findall(ty):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            bytes_ += n * _DTYPE_BYTES.get(dt, 4)
+        out[name] += bytes_
+    return out
+
+
+# -------------------------------------------------------------- lowering ----
+def use_fsdp_mapping(arch: ArchConfig, shape: ShapeSpec, mesh) -> bool:
+    """FSDP/ZeRO-3 mapping for non-MoE train/prefill: tokens >> devices and
+    params small enough that per-layer weight gathers beat per-layer
+    activation all-reduces (EXPERIMENTS.md §Perf hillclimb #1)."""
+    if arch.n_experts or shape.kind == "decode":
+        return False
+    n_dev = 1
+    for v in mesh.shape.values():
+        n_dev *= v
+    return shape.global_batch % n_dev == 0 and arch.param_count() < 2e10
+
+
+def build_lowered(arch: ArchConfig, shape: ShapeSpec, mesh):
+    sh.set_mesh(mesh, data_only=use_fsdp_mapping(arch, shape, mesh))
+    specs = input_specs(arch, shape)
+    params_shape = jax.eval_shape(
+        partial(model_lib.init_params, arch), jax.random.PRNGKey(0)
+    )
+    batch_axes = batch_sharding_spec(
+        mesh, shape.global_batch, data_only=use_fsdp_mapping(arch, shape, mesh)
+    )
+    tok_spec = P(batch_axes, None)
+    batch_sharding = {
+        k: NamedSharding(mesh, tok_spec if v.ndim == 2 else P(batch_axes, None, None))
+        for k, v in specs.items()
+    }
+
+    if shape.kind == "train":
+        tc = TrainConfig(microbatches=1)
+        step_fn, opt_init = make_train_step(arch, tc, mesh)
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        p_sh = sh.tree_shardings(params_shape, mesh)
+        o_sh = sh.tree_shardings(opt_shape, mesh)
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(p_sh, o_sh, batch_sharding, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = fn.lower(
+                params_shape, opt_shape, specs, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+        return lowered
+
+    # serving paths run on quantized weights (the paper's technique)
+    qparams_shape = jax.eval_shape(
+        lambda: model_lib.quantize_params(
+            model_lib.init_params(arch, jax.random.PRNGKey(0)), arch.serve_w_bits
+        )
+    )
+    qp_sh = sh.tree_shardings(qparams_shape, mesh)
+
+    if shape.kind == "prefill":
+        fn = jax.jit(
+            lambda p, b: model_lib.prefill(p, b, arch, shape.seq_len, mesh),
+            in_shardings=(qp_sh, batch_sharding),
+        )
+        with mesh:
+            lowered = fn.lower(qparams_shape, specs)
+        return lowered
+
+    # decode
+    cache_shape, cache_spec = cache_specs(arch, shape, mesh)
+    c_sh = _spec_tree_to_shardings(mesh, cache_spec)
+    tok_sharding = NamedSharding(mesh, tok_spec)
+    fn = jax.jit(
+        lambda p, t, c: model_lib.decode_step(p, t, c, arch, mesh),
+        in_shardings=(qp_sh, tok_sharding, c_sh),
+        donate_argnums=(2,),
+    )
+    with mesh:
+        lowered = fn.lower(qparams_shape, specs["tokens"], cache_shape)
+    return lowered
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, force: bool = False) -> dict:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out_path = os.path.join(OUT_DIR, f"{arch_name}__{shape_name}__{mesh_tag}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            cached = json.load(f)
+        if cached.get("ok"):  # failed cells always re-run
+            return cached
+    arch = get_config(arch_name)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": list(mesh.shape.values()),
+        "axes": list(mesh.axis_names),
+        "kind": shape.kind,
+    }
+    t0 = time.time()
+    try:
+        lowered = build_lowered(arch, shape, mesh)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        mem = compiled.memory_analysis()
+        print(mem)
+        if mem is not None:
+            for attr in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            ):
+                rec[attr] = getattr(mem, attr, None)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0] if cost else {}
+        rec["xla_flops_per_device"] = float(cost.get("flops", 0.0)) if cost else 0.0
+        rec["xla_bytes_per_device"] = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+        hlo = compiled.as_text()
+        # multiplicity-corrected analysis (XLA counts while bodies ONCE; our
+        # layer stacks are scans — see launch/hlo_analysis.py)
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        corrected = analyze_hlo(hlo)
+        rec["flops_per_device"] = corrected["flops"]
+        rec["bytes_per_device"] = corrected["hbm_bytes"]
+        rec["collective_bytes"] = corrected["collective_bytes"]
+        rec["while_loops"] = corrected["while_loops"]
+        rec["collective_bytes_toplevel"] = collective_bytes_from_hlo(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        print({"flops": rec["flops_per_device"], "hbm": rec["bytes_per_device"]})
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, don't mask others
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        sh.set_mesh(None)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK" if rec.get("ok") else f"FAIL: {rec.get('error', '')[:200]}"
+    print(f"[dryrun] {arch_name} x {shape_name} x {mesh_tag}: {status} "
+          f"(lower {rec.get('lower_s', 0):.0f}s compile {rec.get('compile_s', 0):.0f}s)")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [
+            (a, s)
+            for a in list_archs()
+            for s in cells_for_arch(get_config(a))
+        ]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+    failures = 0
+    for a, s in cells:
+        for mp in meshes:
+            rec = run_cell(a, s, mp, force=args.force)
+            failures += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

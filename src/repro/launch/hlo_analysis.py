@@ -1,0 +1,284 @@
+"""Multiplicity-corrected cost analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts each while-loop BODY
+once, but our models scan over layers (deliberately — O(1) HLO size at 512
+devices), so XLA's flops/bytes under-count by ~n_layers.  This module parses
+the HLO text, walks the computation graph from ENTRY, multiplies while-body
+contributions by their ``known_trip_count``, and produces:
+
+  * flops            — dot/convolution FLOPs (2 x prod(out) x contraction)
+  * hbm_bytes        — sum of (operand + output) bytes of every top-level,
+                       memory-touching op (fusions, dots, copies, DUS...),
+                       the same convention XLA's bytes-accessed uses
+  * collective_bytes — per collective type, output-operand bytes
+
+All values are per-device (the module is the per-device SPMD program).
+Validated against analytic 6ND/2ND model FLOPs in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred|token)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_CALL_RE = re.compile(r"(?:calls|body|condition|branch_computations)=\{?%?([\w.\-,% ]+)\}?")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+# ops that are views / control only — no HBM traffic of their own
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "while", "conditional", "call", "after-all", "iota",
+    "partition-id", "replica-id", "bitcast-convert",
+}
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[list[int], str]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return [], "f32"
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims, m.group(1)
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    line: str
+    operands: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    params: dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _parse_operands(line: str, op_kind: str) -> list[str]:
+    # operand list = first (...) group after the op name
+    idx = line.find(op_kind + "(")
+    if idx < 0:
+        return []
+    depth = 0
+    start = idx + len(op_kind)
+    out = []
+    cur = []
+    for ch in line[start:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                out.append("".join(cur).strip())
+                break
+        elif ch == "," and depth == 1:
+            out.append("".join(cur).strip())
+            cur = []
+            continue
+        cur.append(ch)
+    names = []
+    for o in out:
+        m = re.search(r"%([\w.\-]+)\s*$", o) or re.search(r"%([\w.\-]+)", o)
+        names.append(m.group(1) if m else o)
+    return names
+
+
+def _parse_op_line(stripped: str) -> Op | None:
+    m = _NAME_RE.match(stripped)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = re.sub(r"/\*.*?\*/", "", stripped[m.end():]).lstrip()
+    if rest.startswith("("):  # tuple type: match parens
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        type_str, tail = rest[:end], rest[end:]
+    else:
+        mm = re.match(r"\S+", rest)
+        if not mm:
+            return None
+        type_str, tail = mm.group(0), rest[mm.end():]
+    km = re.match(r"\s*([\w\-]+)\(", tail)
+    if not km:
+        return None
+    return Op(name=name, type_str=type_str, kind=km.group(1), line=stripped)
+
+
+def parse_module(hlo: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name: str | None = None
+    for raw in hlo.splitlines():
+        stripped = raw.strip()
+        if cur is None:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$", stripped)
+            if m:
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry_name = m.group(2)
+                for pm in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^)]*\)|[^,)]+))", m.group(3)):
+                    cur.params[pm.group(1)] = pm.group(2)
+                comps[cur.name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        op = _parse_op_line(stripped)
+        if op is not None:
+            cur.ops.append(op)
+    return comps, entry_name
+
+
+def _dot_flops(op: Op, symbols: dict[str, str]) -> float:
+    out_dims, _ = _shape_dims(op.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contraction size from lhs shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    operands = _parse_operands(op.line, "dot")
+    contract = 1
+    if m and operands:
+        lhs_type = symbols.get(operands[0], "")
+        lhs_dims, _ = _shape_dims(lhs_type)
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
+    return 2.0 * out_elems * max(contract, 1)
+
+
+def _conv_flops(op: Op, symbols: dict[str, str]) -> float:
+    out_dims, _ = _shape_dims(op.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    operands = _parse_operands(op.line, "convolution")
+    k = 1
+    if len(operands) > 1:
+        kd, _ = _shape_dims(symbols.get(operands[1], ""))
+        for d in kd[:-1]:  # all but output-feature dim (approx)
+            k *= d
+    return 2.0 * out_elems * max(k, 1)
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps, entry_name = parse_module(hlo)
+    entry = comps.get(entry_name) if entry_name else None
+    if entry is None:
+        for name, c in comps.items():
+            if name.startswith("main") or entry is None:
+                entry = c
+    totals = {
+        "flops": 0.0,
+        "hbm_bytes": 0.0,
+        "collective_bytes": {k: 0.0 for k in _COLLECTIVES},
+        "while_loops": [],
+    }
+    visited: set[tuple[str, float]] = set()
+
+    def walk(comp: Computation, mult: float) -> None:
+        key = (comp.name, mult)
+        # (a computation may be reused; walk each call site)
+        symbols: dict[str, str] = dict(comp.params)
+        for op in comp.ops:
+            symbols[op.name] = op.type_str
+        for op in comp.ops:
+            kind = op.kind
+            # descend into control flow
+            if kind == "while":
+                trip = 1.0
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = float(tm.group(1))
+                cm = re.search(r"body=%?([\w.\-]+)", op.line)
+                if cm and cm.group(1) in comps:
+                    totals["while_loops"].append({"body": cm.group(1), "trip": trip})
+                    walk(comps[cm.group(1)], mult * trip)
+                continue
+            if kind in ("call", "conditional", "async-start"):
+                for cm in re.finditer(r"%([\w.\-]+)", op.line.split(kind + "(")[-1]):
+                    if cm.group(1) in comps and "fused" not in cm.group(1):
+                        walk(comps[cm.group(1)], mult)
+                continue
+            # collectives
+            coll = None
+            for c in _COLLECTIVES:
+                if kind == c or kind.startswith(c + "-start"):
+                    coll = c
+                    break
+            if coll:
+                b = _shape_bytes(op.type_str)
+                if kind.endswith("-start"):
+                    b /= 2  # start ops carry (in, out) tuples
+                totals["collective_bytes"][coll] += b * mult
+                totals["hbm_bytes"] += b * mult
+                continue
+            if kind.endswith("-done"):
+                continue
+            # flops
+            if kind == "dot":
+                totals["flops"] += _dot_flops(op, symbols) * mult
+            elif kind == "convolution":
+                totals["flops"] += _conv_flops(op, symbols) * mult
+            elif kind == "fusion":
+                # count dots inside the fused computation (rare on CPU)
+                cm = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if cm and cm.group(1) in comps:
+                    fused = comps[cm.group(1)]
+                    fsym = dict(fused.params)
+                    for fop in fused.ops:
+                        fsym[fop.name] = fop.type_str
+                    for fop in fused.ops:
+                        if fop.kind == "dot":
+                            totals["flops"] += _dot_flops(fop, fsym) * mult
+                        elif fop.kind == "convolution":
+                            totals["flops"] += _conv_flops(fop, fsym) * mult
+            # memory traffic
+            if kind in _NO_TRAFFIC:
+                continue
+            if kind == "dynamic-update-slice":
+                ops_ = _parse_operands(op.line, kind)
+                upd = symbols.get(ops_[1], "") if len(ops_) > 1 else ""
+                totals["hbm_bytes"] += 2 * _shape_bytes(upd) * mult
+                continue
+            b = _shape_bytes(op.type_str)
+            for o in _parse_operands(op.line, kind):
+                b += _shape_bytes(symbols.get(o, ""))
+            totals["hbm_bytes"] += b * mult
+
+    if entry is not None:
+        walk(entry, 1.0)
+    return totals

@@ -1,0 +1,159 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For each (arch x shape) cell on the single-pod mesh, derives the three
+roofline terms from the compiled per-device module:
+
+    compute   = flops_per_device / peak_flops_per_chip
+    memory    = bytes_per_device / hbm_bw_per_chip
+    collective= wire_bytes_per_device / ici_bw_per_chip
+
+(dividing per-device quantities by per-chip rates == the assignment's
+global/(chips x rate) formulas), plus MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Hardware constants (TPU v5e class, per the assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link (wire-bytes modelled per chip through its links)
+
+# Ring-style wire weighting per collective type (bytes crossing a chip's
+# links per byte of output-operand, n = participants; n is large so the
+# (n-1)/n factors ~1; all-reduce costs ~2x (reduce-scatter + all-gather)).
+WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    cfg = get_config(arch_name)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = shape.global_batch
+    return 2.0 * n_active * tokens
+
+
+def analyze(rec: dict) -> dict:
+    flops = rec.get("flops_per_device", 0.0)
+    coll = rec.get("collective_bytes", {})
+    wire = sum(WIRE_FACTOR.get(k, 1.0) * v for k, v in coll.items())
+    n_dev = 1
+    for d in rec.get("mesh", []):
+        n_dev *= d
+    # HBM bytes: XLA's post-fusion `bytes accessed` counts while bodies once;
+    # scale it by the same loop-multiplicity factor observed on FLOPs
+    # (corrected/uncorrected).  The raw unfused-HLO byte sum is kept as an
+    # upper bound.
+    xla_flops = rec.get("xla_flops_per_device", 0.0)
+    xla_bytes = rec.get("xla_bytes_per_device", 0.0)
+    mult = flops / xla_flops if xla_flops > 0 else 1.0
+    mult = max(mult, 1.0)
+    byts = xla_bytes * mult
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = flops * n_dev
+    step_time = max(terms.values())
+    useful_frac = mf / hlo_global if hlo_global else 0.0
+    # roofline fraction: useful model FLOP/s achieved at the bound, vs peak
+    mfu_bound = (mf / n_dev / PEAK_FLOPS) / step_time if step_time else 0.0
+    return {
+        **rec,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flop_ratio": useful_frac,
+        "roofline_fraction": mfu_bound,
+        "wire_bytes": wire,
+        "hbm_bytes_scaled": byts,
+        "hbm_bytes_unfused_ub": rec.get("bytes_per_device", 0.0),
+        "loop_mult": mult,
+    }
+
+
+def load_all(mesh_tag: str = "pod1") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh_tag}.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            out.append(analyze(rec))
+        else:
+            out.append(rec)
+    return out
+
+
+def table(records: list[dict], markdown: bool = True) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "HBM GB/dev | useful/HLO | roofline frac |"
+    )
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in records:
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | FAILED: {r.get('error','')[:60]} |||||||"
+            )
+            continue
+        hbm_gb = (r.get("argument_size_in_bytes") or 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {hbm_gb:.2f} | {r['useful_flop_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    recs = load_all(args.mesh)
+    if args.json:
+        print(json.dumps(recs, indent=1))
+        return
+    print(table(recs))
+    ok = [r for r in recs if r.get("ok")]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        coll_bound = max(ok, key=lambda r: r["t_collective_s"] / max(r["t_compute_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+              f"({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound: {coll_bound['arch']} x {coll_bound['shape']}")
+
+
+if __name__ == "__main__":
+    main()

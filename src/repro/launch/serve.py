@@ -1,0 +1,70 @@
+"""Serving launcher: multi-precision quantized inference (the paper's use
+case) with the batched request engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+        --requests 8 --new-tokens 16 [--w-bits 4]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--w-bits", type=int, default=0, help="0 = arch default")
+    ap.add_argument("--no-quantize", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import transformer as model_lib
+    from repro.train.server import Request, Server
+
+    arch = get_config(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+    if args.w_bits:
+        arch = dataclasses.replace(arch, serve_w_bits=args.w_bits)
+
+    params = model_lib.init_params(arch, jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.new_tokens + arch.prefix_len + 8
+    srv = Server(
+        arch, params, batch_size=args.batch_size, max_len=max_len,
+        quantize=not args.no_quantize,
+    )
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, arch.vocab, args.prompt_len).astype(np.int32),
+            max_new_tokens=args.new_tokens,
+        )
+        for i in range(args.requests)
+    ]
+    srv.serve(reqs)
+    stats = srv.stats
+    print(json.dumps({
+        "arch": arch.name,
+        "w_bits": arch.serve_w_bits,
+        "kv_bits": arch.serve_kv_bits,
+        "requests": len(reqs),
+        "tokens_out": stats.tokens_out,
+        "prefill_s": round(stats.prefill_s, 3),
+        "decode_s": round(stats.decode_s, 3),
+        "decode_tok_per_s": round(stats.tokens_out / max(stats.decode_s, 1e-9), 1),
+        "sample_output": reqs[0].out_tokens[:8],
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

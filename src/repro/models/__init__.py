@@ -1,0 +1,1 @@
+"""Model zoo: CNN benchmark networks (the paper's) + the assigned LM fleet."""

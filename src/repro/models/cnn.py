@@ -1,0 +1,85 @@
+"""Runnable JAX versions of the paper's CNN benchmarks (VGG16 / ResNet18 /
+GoogLeNet / SqueezeNet), built from the same layer tables as the cycle model
+(models/cnn_zoo.py) and executing every convolution through the
+multi-precision conv path (kernels/ops.mpconv) with the mixed FF/CF dataflow
+selector — the end-to-end artifact behind examples/cnn_inference_speed.py.
+
+Weights are random (the paper evaluates throughput/efficiency on conv layers,
+not accuracy); correctness of each conv is pinned against lax.conv oracles in
+the kernel tests.  `run_network` reports the per-layer dataflow the selector
+chose so Fig. 3's layer-wise story is directly observable.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import ConvLayer
+from repro.core.isa import Dataflow
+from repro.core.perfmodel import SpeedModel, select_dataflow
+from repro.core.precision import Precision
+from repro.kernels import ops
+from repro.models.cnn_zoo import BENCHMARK_NETWORKS
+
+__all__ = ["init_network", "run_network"]
+
+
+def init_network(net: str, key, w_bits: int = 8):
+    """Random weights for every conv layer, pre-quantized/packed."""
+    layers = BENCHMARK_NETWORKS[net]()
+    params = []
+    for i, l in enumerate(layers):
+        k = jax.random.fold_in(key, i)
+        w = jax.random.normal(k, (l.k, l.k, l.cin, l.cout), jnp.float32) / (
+            l.k * (l.cin ** 0.5)
+        )
+        params.append(ops.conv_pack_weights(w, w_bits))
+    return layers, params
+
+
+def run_network(
+    net: str,
+    x: jnp.ndarray,  # [N, H, W, 3]
+    params,
+    layers: list[ConvLayer],
+    *,
+    w_bits: int = 8,
+    strategy: Literal["ff", "cf", "mixed"] = "mixed",
+    interpret: bool | None = None,
+):
+    """Chains the conv layers (topology simplified to a sequential trace of
+    the conv workload: pooling/branching replaced by shape adaptation, since
+    the paper's metric covers convolutional layers only).  Returns (activations,
+    per-layer dataflow decisions)."""
+    model = SpeedModel()
+    decisions: list[str] = []
+    for layer, (wd, ws) in zip(layers, params):
+        # adapt the running activation to this layer's expected input shape
+        n = x.shape[0]
+        if x.shape[1] != layer.h or x.shape[3] != layer.cin:
+            x = jax.image.resize(x, (n, layer.h, layer.w, x.shape[3]), "nearest")
+            if x.shape[3] != layer.cin:
+                reps = -(-layer.cin // x.shape[3])
+                x = jnp.tile(x, (1, 1, 1, reps))[..., : layer.cin]
+        if strategy == "mixed":
+            df = select_dataflow(layer, Precision.from_bits(w_bits), model)
+            dataflow = "ff" if df is Dataflow.FF else "cf"
+        else:
+            dataflow = strategy
+        decisions.append(f"{layer.name}: {dataflow}")
+        x = ops.mpconv(
+            x,
+            wd,
+            ws,
+            w_bits=w_bits,
+            ksize=layer.k,
+            stride=layer.stride,
+            padding=layer.padding,
+            mode="dequant",
+            dataflow=dataflow,
+            interpret=interpret,
+        )
+        x = jax.nn.relu(x)
+    return x, decisions

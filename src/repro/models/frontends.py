@@ -1,0 +1,31 @@
+"""Modality-frontend STUBS for the [vlm]/[audio] architectures.
+
+Per the assignment, the assigned configs specify the transformer BACKBONE
+only; the modality frontend (SigLIP vision tower for paligemma-3b, EnCodec /
+T5 conditioning for musicgen-medium) is a stub whose job is to provide
+shape/dtype-correct precomputed patch/frame embeddings — both for real
+batches (deterministic synthetic features) and for the dry-run's
+ShapeDtypeStruct input specs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def prefix_embeddings(cfg: ArchConfig, batch_size: int, seed: int = 0) -> jnp.ndarray:
+    """Deterministic synthetic patch/frame embeddings [B, prefix_len, D]."""
+    if not cfg.prefix_len:
+        raise ValueError(f"{cfg.name} has no modality frontend")
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), batch_size)
+    x = jax.random.normal(key, (batch_size, cfg.prefix_len, cfg.d_model), jnp.float32)
+    return (x / jnp.sqrt(jnp.float32(cfg.d_model))).astype(jnp.dtype(cfg.dtype))
+
+
+def prefix_spec(cfg: ArchConfig, batch_size: int) -> jax.ShapeDtypeStruct:
+    """Dry-run stand-in (no allocation)."""
+    return jax.ShapeDtypeStruct(
+        (batch_size, cfg.prefix_len, cfg.d_model), jnp.dtype(cfg.dtype)
+    )

@@ -1,0 +1,187 @@
+"""Mamba2 (SSD — state-space duality) blocks, for mamba2-130m and zamba2-7b.
+
+Implements the SSD scalar-identity formulation (Dao & Gu 2024, arXiv:
+2405.21060): per head h with state size N and head dim P,
+
+    h_t = a_t * h_{t-1} + dt_t * (B_t  (x)  x_t)          a_t = exp(dt_t * A_h)
+    y_t = C_t . h_t + D_h * x_t
+
+computed CHUNK-PARALLEL: the sequence splits into chunks of length Q; within
+a chunk the quadratic "attention-like" term C_i (prod a) B_j^T handles
+intra-chunk interactions; a lax.scan over chunks carries the [H, P, N] state
+for inter-chunk recurrence — O(S*Q) work, O(S) memory, and the TPU-friendly
+matmul-dominated form (the duality the paper is named for).
+
+Decode keeps the [B, H, P, N] state and steps the recurrence in O(1) per
+token (`ssd_decode_step`) — this is what makes `long_500k` runnable for the
+SSM/hybrid archs where full-attention archs are skipped.
+
+Naming: x/z gating, B/C input/output projections, dt via softplus, grouped
+n_groups=1 (B/C shared across heads), following the reference Mamba2 design.
+The in/out projections run through the quantized-dense path at serve time
+(the paper's multi-precision technique applies to the projection matmuls;
+the recurrence itself stays in fp32 — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense, dense_init, rms_norm
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int  # = expand * d_model (expand=2)
+    n_heads: int  # = d_inner // head_p
+    head_p: int  # head dim (P), 64
+    state: int  # N
+
+
+def ssm_dims(d_model: int, state: int, head_p: int = 64, expand: int = 2) -> SSMDims:
+    d_inner = expand * d_model
+    return SSMDims(d_model, d_inner, d_inner // head_p, head_p, state)
+
+
+def init_ssm_params(key, dims: SSMDims, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    d, di, n = dims.d_model, dims.d_inner, dims.state
+    return {
+        # fused input projection: [z (di), x (di), B (n), C (n), dt (H)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + dims.n_heads, dtype),
+        "out_proj": dense_init(ks[1], di, d, dtype),
+        "A_log": jnp.zeros((dims.n_heads,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((dims.n_heads,), jnp.float32),
+        "dt_bias": jnp.full((dims.n_heads,), np.log(np.e - 1), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _split_proj(proj: jnp.ndarray, dims: SSMDims):
+    di, n, h = dims.d_inner, dims.state, dims.n_heads
+    z, x, b, c, dt = jnp.split(proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, x, b, c, dt
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # [B, S, H, P] f32
+    dt: jnp.ndarray,  # [B, S, H] f32 (post-softplus)
+    a_log: jnp.ndarray,  # [H]
+    b: jnp.ndarray,  # [B, S, N] f32 (shared across heads, n_groups=1)
+    c: jnp.ndarray,  # [B, S, N]
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    """Chunk-parallel SSD; returns y [B, S, H, P] f32 (and the final
+    [B, H, P, N] state when return_state — used by prefill)."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+    a = -jnp.exp(a_log)  # [H], negative
+    loga = dt * a[None, None, :]  # [B, S', H]  log decay per step
+
+    xc = x.reshape(bs, nc, q, h, p).swapaxes(0, 1)  # [nc, B, q, H, P]
+    dtc = dt.reshape(bs, nc, q, h).swapaxes(0, 1)
+    lac = loga.reshape(bs, nc, q, h).swapaxes(0, 1)
+    bc = b.reshape(bs, nc, q, n).swapaxes(0, 1)
+    cc = c.reshape(bs, nc, q, n).swapaxes(0, 1)
+
+    def chunk_step(state, xs):
+        # state: [B, H, P, N]
+        xq, dtq, laq, bq, cq = xs
+        cum = jnp.cumsum(laq, axis=1)  # [B, q, H] inclusive log-decay
+        total = cum[:, -1]  # [B, H]
+        # intra-chunk (attention-like, lower-triangular):
+        # L[i, j] = exp(cum_i - cum_j) for i >= j
+        li = cum[:, :, None, :] - cum[:, None, :, :]  # [B, q, q, H]
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        lmat = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)  # [B, q, q]
+        gates = cb[..., None] * lmat * dtq[:, None, :, :]  # [B, i, j, H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", gates, xq)
+        # contribution of carried state:
+        y_state = jnp.einsum("bin,bhpn,bih->bihp", cq, state, jnp.exp(cum))
+        # new state: decayed old + sum_j exp(total - cum_j) dt_j B_j x_j
+        w = jnp.exp(total[:, None, :] - cum) * dtq  # [B, q, H]
+        ds = jnp.einsum("bjn,bjhp,bjh->bhpn", bq, xq, w)
+        state_new = state * jnp.exp(total)[:, :, None, None] + ds
+        return state_new, y_intra + y_state
+
+    state0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    state_f, ys = jax.lax.scan(chunk_step, state0, (xc, dtc, lac, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(bs, nc * q, h, p)[:, :s]
+    if return_state:
+        return y, state_f
+    return y
+
+
+def ssm_block(params: dict, x_in: jnp.ndarray, dims: SSMDims, chunk: int = 128) -> jnp.ndarray:
+    """Full Mamba2 block (pre-norm residual handled by caller): [B,S,D]->[B,S,D]."""
+    proj = dense(x_in, params["in_proj"])
+    z, xs, b, c, dtr = _split_proj(proj, dims)
+    bsz, s = x_in.shape[0], x_in.shape[1]
+    xh = xs.astype(jnp.float32).reshape(bsz, s, dims.n_heads, dims.head_p)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    y = ssd_chunked(xh, dt, params["A_log"], b.astype(jnp.float32), c.astype(jnp.float32), chunk)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, dims.d_inner).astype(x_in.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x_in.dtype)  # gated
+    y = rms_norm(y, params["norm"].astype(x_in.dtype))
+    return dense(y, params["out_proj"])
+
+
+def ssm_block_with_state(
+    params: dict, x_in: jnp.ndarray, dims: SSMDims, chunk: int = 128
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Like :func:`ssm_block` but also returns the final [B,H,P,N] state
+    (prefill: the state seeds subsequent O(1) decode steps).  Padded steps
+    inside ssd_chunked are state-identities (dt=0 -> decay 1, update 0)."""
+    proj = dense(x_in, params["in_proj"])
+    z, xs, b, c, dtr = _split_proj(proj, dims)
+    bsz, s = x_in.shape[0], x_in.shape[1]
+    xh = xs.astype(jnp.float32).reshape(bsz, s, dims.n_heads, dims.head_p)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])
+    y, state = ssd_chunked(
+        xh, dt, params["A_log"], b.astype(jnp.float32), c.astype(jnp.float32),
+        chunk, return_state=True,
+    )
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, dims.d_inner).astype(x_in.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x_in.dtype)
+    y = rms_norm(y, params["norm"].astype(x_in.dtype))
+    return dense(y, params["out_proj"]), state
+
+
+def ssm_decode_step(
+    params: dict,
+    x_in: jnp.ndarray,  # [B, 1, D]
+    state: jnp.ndarray,  # [B, H, P, N] f32
+    dims: SSMDims,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent step; returns ([B, 1, D], new_state)."""
+    proj = dense(x_in, params["in_proj"])
+    z, xs, b, c, dtr = _split_proj(proj, dims)
+    bsz = x_in.shape[0]
+    xh = xs.astype(jnp.float32).reshape(bsz, dims.n_heads, dims.head_p)  # S=1 squeezed
+    dt = jax.nn.softplus(dtr.astype(jnp.float32).reshape(bsz, dims.n_heads) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a[None, :])  # [B, H]
+    bf = b.astype(jnp.float32).reshape(bsz, dims.state)
+    cf = c.astype(jnp.float32).reshape(bsz, dims.state)
+    upd = jnp.einsum("bn,bhp,bh->bhpn", bf, xh, dt)
+    state_new = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cf, state_new) + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, dims.d_inner).astype(x_in.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x_in.dtype).reshape(bsz, 1, -1)
+    y = rms_norm(y, params["norm"].astype(x_in.dtype))
+    return dense(y, params["out_proj"]), state_new

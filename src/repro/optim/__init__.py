@@ -1,0 +1,4 @@
+from repro.optim.optimizers import OptState, adafactor, adamw, adamw8bit, make_optimizer
+from repro.optim.schedules import cosine_schedule
+
+__all__ = ["OptState", "adamw", "adafactor", "adamw8bit", "make_optimizer", "cosine_schedule"]

@@ -1,0 +1,22 @@
+"""Quantization substrate: packing, scaling, calibration, quantized layers."""
+from repro.quant.pack import pack_int4, unpack_int4, pack_int4_hi_lo
+from repro.quant.quantize import (
+    QTensor,
+    absmax_scale,
+    dequantize,
+    fake_quantize,
+    quantize,
+    quantize_per_channel,
+)
+
+__all__ = [
+    "QTensor",
+    "absmax_scale",
+    "dequantize",
+    "fake_quantize",
+    "quantize",
+    "quantize_per_channel",
+    "pack_int4",
+    "unpack_int4",
+    "pack_int4_hi_lo",
+]

@@ -1,0 +1,38 @@
+"""Shared test utilities.
+
+NOTE: XLA_FLAGS --xla_force_host_platform_device_count is deliberately NOT
+set here — smoke tests and benches must see 1 device.  Multi-device tests
+spawn subprocesses (see _subproc) that set the flag before importing jax.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def run_subprocess_jax(code: str, n_devices: int = 8, timeout: int = 600):
+    """Runs `code` in a fresh python with n_devices fake host devices.
+    Returns CompletedProcess; asserts on failure with full output."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess_jax

@@ -1,0 +1,96 @@
+"""Flash attention (scan form) and decode attention vs naive softmax oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import decode_attention, flash_attention
+
+RNG = np.random.default_rng(0)
+
+
+def naive_attention(q, k, v, causal=True, window=None, q_offset=0):
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    scores /= np.sqrt(d)
+    qp = q_offset + jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= (qp - kp) < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv).astype(q.dtype)
+
+
+def _case(b, sq, sk, hkv, g, d):
+    q = jnp.asarray(RNG.normal(size=(b, sq, hkv * g, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, sk, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, sk, hkv, d)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [None, 16, 64])
+@pytest.mark.parametrize("b,s,hkv,g,d", [(2, 128, 2, 2, 32), (1, 200, 1, 4, 64)])
+def test_flash_vs_naive(window, b, s, hkv, g, d):
+    q, k, v = _case(b, s, s, hkv, g, d)
+    got = flash_attention(q, k, v, causal=True, window=window, block_q=64, block_k=64)
+    exp = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_dynamic_window():
+    """gemma3-style: window passed as a traced scalar."""
+    q, k, v = _case(1, 128, 128, 2, 2, 32)
+
+    @jax.jit
+    def f(win):
+        return flash_attention(q, k, v, causal=True, window=win, block_q=64, block_k=64)
+
+    got = f(jnp.asarray(16, jnp.int32))
+    exp = naive_attention(q, k, v, causal=True, window=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_q_offset():
+    """Continuation chunk: queries at absolute positions 64.."""
+    q, k, v = _case(1, 64, 128, 2, 2, 32)
+    k2, v2 = jnp.tile(k, (1, 2, 1, 1)), jnp.tile(v, (1, 2, 1, 1))
+    got = flash_attention(q, k2, v2, causal=True, q_offset=64, block_q=32, block_k=32)
+    exp = naive_attention(q, k2, v2, causal=True, q_offset=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 32])
+def test_decode_vs_naive(window):
+    b, s, hkv, g, d = 2, 96, 2, 3, 32
+    q, k, v = _case(b, 1, 8, hkv, g, d)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    length = 80
+    got = decode_attention(q, k, v, length, window=window)
+    # oracle: a 1-query attention with q at position length-1
+    kk = k[:, :length]
+    vv = v[:, :length]
+    exp = naive_attention(q, kk, vv, causal=True, window=window, q_offset=length - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_decode_quantized_scales():
+    b, s, hkv, g, d = 1, 64, 2, 2, 32
+    q = jnp.asarray(RNG.normal(size=(b, 1, hkv * g, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), jnp.float32)
+    from repro.kernels.ops import quantize_kv
+
+    kd, ks = quantize_kv(k, 8)
+    vd, vs = quantize_kv(v, 8)
+    got = decode_attention(q, kd, vd, s, k_scale=ks, v_scale=vs)
+    exp = decode_attention(q, k, v, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-2, rtol=2e-2)

@@ -1,0 +1,86 @@
+"""Custom-instruction encodings: round-trip, field packing, decode rejection."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.isa import (
+    OPCODE_CUSTOM1,
+    OPCODE_OP_V,
+    VSACFG,
+    VSALD,
+    VSAM,
+    Dataflow,
+    decode,
+    disassemble,
+    encode,
+)
+from repro.core.precision import Precision
+
+PRECISIONS = [Precision.INT4, Precision.INT8, Precision.INT16]
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    prec=st.sampled_from(PRECISIONS),
+    df=st.sampled_from([Dataflow.FF, Dataflow.CF]),
+    kh=st.integers(0, 7),
+    clr=st.booleans(),
+    th=st.integers(0, 31),
+    rd=st.integers(0, 31),
+)
+def test_vsacfg_roundtrip(prec, df, kh, clr, th, rd):
+    inst = VSACFG(precision=prec, dataflow=df, kernel_hint=kh, acc_clear=clr, tile_h=th, rd=rd)
+    word = encode(inst)
+    assert 0 <= word < (1 << 32)
+    assert word & 0x7F == OPCODE_OP_V
+    assert decode(word) == inst
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    vd=st.integers(0, 31),
+    rs1=st.integers(0, 31),
+    ln=st.integers(0, 31),
+    bc=st.booleans(),
+)
+def test_vsald_roundtrip(vd, rs1, ln, bc):
+    inst = VSALD(vd=vd, rs1=rs1, length=ln, broadcast=bc)
+    word = encode(inst)
+    assert word & 0x7F == OPCODE_CUSTOM1
+    assert decode(word) == inst
+
+
+@settings(max_examples=200, deadline=None)
+@given(acc=st.integers(0, 31), vs1=st.integers(0, 31), vs2=st.integers(0, 31))
+def test_vsam_roundtrip(acc, vs1, vs2):
+    inst = VSAM(acc=acc, vs1=vs1, vs2=vs2)
+    assert decode(encode(inst)) == inst
+
+
+def test_distinct_encodings():
+    words = {
+        encode(VSACFG()),
+        encode(VSALD(vd=1, rs1=2)),
+        encode(VSAM(acc=1, vs1=2, vs2=3)),
+    }
+    assert len(words) == 3
+
+
+def test_decode_rejects_non_custom():
+    with pytest.raises(ValueError):
+        decode(0x00000013)  # addi x0, x0, 0
+    with pytest.raises(ValueError):
+        decode(1 << 33)
+
+
+def test_field_overflow_rejected():
+    with pytest.raises(ValueError):
+        VSALD(vd=32, rs1=0).encode()
+    with pytest.raises(ValueError):
+        VSACFG(tile_h=32).encode()
+
+
+def test_disassemble():
+    assert "vsacfg" in disassemble(encode(VSACFG(precision=Precision.INT4)))
+    assert "bcast" in disassemble(encode(VSALD(vd=1, rs1=2, broadcast=True)))
+    assert "vsam" in disassemble(encode(VSAM(acc=16, vs1=0, vs2=8)))

@@ -1,0 +1,60 @@
+"""mpconv (multi-precision conv through the matmul core) vs lax.conv oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _quantized_oracle(x, w, ws, w_bits, stride, pad):
+    """Conv with the same weight quantization the op applies."""
+    qmax = 2 ** (w_bits - 1) - 1
+    wq = ws.reshape(1, 1, 1, -1) * jnp.round(
+        jnp.clip(w / ws.reshape(1, 1, 1, -1), -qmax - 1, qmax)
+    )
+    return ref.mpconv_ref(x, wq, stride=stride, padding=pad)
+
+
+@pytest.mark.parametrize("w_bits", [4, 8])
+@pytest.mark.parametrize("dataflow", ["ff", "cf", "auto"])
+@pytest.mark.parametrize("ksize,stride,pad", [(1, 1, 0), (3, 1, 1), (5, 1, 2), (3, 2, 1)])
+def test_mpconv_sweep(w_bits, dataflow, ksize, stride, pad):
+    n, h, w_, ci, co = 2, 10, 10, 12, 24
+    x = jnp.asarray(RNG.normal(size=(n, h, w_, ci)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(ksize, ksize, ci, co)), jnp.float32)
+    wd, ws = ops.conv_pack_weights(w, w_bits)
+    got = ops.mpconv(
+        x, wd, ws, w_bits=w_bits, ksize=ksize, stride=stride, padding=pad,
+        dataflow=dataflow,
+    )
+    exp = _quantized_oracle(x, w, ws, w_bits, stride, pad)
+    assert got.shape == exp.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-2, rtol=2e-2)
+
+
+def test_ff_and_cf_agree():
+    n, h, w_, ci, co = 1, 8, 8, 8, 16
+    x = jnp.asarray(RNG.normal(size=(n, h, w_, ci)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(3, 3, ci, co)), jnp.float32)
+    wd, ws = ops.conv_pack_weights(w, 8)
+    a = ops.mpconv(x, wd, ws, w_bits=8, ksize=3, padding=1, dataflow="ff")
+    b = ops.mpconv(x, wd, ws, w_bits=8, ksize=3, padding=1, dataflow="cf")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+def test_cnn_zoo_tiny_network_runs():
+    """End-to-end: a few GoogLeNet-shaped layers through the mixed selector."""
+    from repro.core.perfmodel import select_dataflow
+    from repro.core.dataflow import ConvLayer
+    from repro.core.isa import Dataflow
+    from repro.core.precision import Precision
+
+    # conv1x1 should pick CF, conv5x5 should pick FF under the fitted model
+    l1 = ConvLayer("1x1", 192, 64, 1, 28, 28, 1, 0)
+    l5 = ConvLayer("5x5", 192, 64, 5, 28, 28, 1, 2)
+    d1 = select_dataflow(l1, Precision.INT16)
+    d5 = select_dataflow(l5, Precision.INT16)
+    assert d1 in (Dataflow.FF, Dataflow.CF)
+    assert d5 in (Dataflow.FF, Dataflow.CF)

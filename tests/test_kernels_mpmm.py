@@ -1,0 +1,94 @@
+"""Pallas mpmm kernel vs the pure-jnp oracle: shape/dtype/precision/dataflow
+sweep in interpret mode (kernel body executes on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.quant.pack import pack_int4
+
+RNG = np.random.default_rng(0)
+
+
+def _float_case(m, k, n):
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    return x, w
+
+
+@pytest.mark.parametrize("w_bits", [4, 8])
+@pytest.mark.parametrize("dataflow", ["cf", "ff"])
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(8, 128, 128), (96, 384, 160), (1, 256, 512), (130, 520, 130)],
+)
+def test_dequant_sweep(w_bits, dataflow, m, k, n):
+    x, w = _float_case(m, k, n)
+    wd, ws = ops.pack_weights(w, w_bits)
+    got = ops.mpmm(x, wd, ws, w_bits=w_bits, mode="dequant", dataflow=dataflow)
+    exp = ref.mpmm_ref(x, wd, ws, w_bits=w_bits, mode="dequant")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("w_bits,x_bits", [(16, 16), (8, 8), (4, 8), (8, 16), (16, 8)])
+@pytest.mark.parametrize("dataflow", ["cf", "ff"])
+def test_int_mode_bit_exact(w_bits, x_bits, dataflow):
+    m, k, n = 32, 256, 128
+    xlim = 2 ** (x_bits - 1) - 1
+    x = jnp.asarray(
+        RNG.integers(-xlim, xlim, (m, k)), jnp.int16 if x_bits == 16 else jnp.int8
+    )
+    wlim = 7 if w_bits == 4 else 2 ** (w_bits - 1) - 1
+    wq = RNG.integers(-wlim - 1, wlim + 1, (k, n))
+    wq = jnp.asarray(wq, jnp.int16 if w_bits == 16 else jnp.int8)
+    wd = pack_int4(wq.astype(jnp.int8), axis=0) if w_bits == 4 else wq
+    ws = jnp.ones((1, n), jnp.float32)
+    got_scaled = ops.mpmm(x, wd, ws, w_bits=w_bits, x_bits=x_bits, mode="int", dataflow=dataflow)
+    exp = ref.mpmm_ref(x, wd, ws, w_bits=w_bits, mode="int")
+    np.testing.assert_array_equal(
+        np.asarray(got_scaled), np.asarray(exp).astype(np.float32)
+    )
+
+
+def test_int_wraparound_semantics():
+    """int32 accumulator wraparound matches the 32-bit SAU semantics."""
+    m, k, n = 8, 256, 128
+    x = jnp.full((m, k), 32767, jnp.int16)
+    wq = jnp.full((k, n), 32767, jnp.int16)
+    ws = jnp.ones((1, n), jnp.float32)
+    got = ops.mpmm(x, wq, ws, w_bits=16, x_bits=16, mode="int")
+    exp = ref.mpmm_ref(x, wq, ws, w_bits=16, mode="int").astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_batched_leading_dims():
+    x = jnp.asarray(RNG.normal(size=(2, 3, 256)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(256, 128)), jnp.float32)
+    wd, ws = ops.pack_weights(w, 8)
+    got = ops.mpmm(x, wd, ws, w_bits=8)
+    assert got.shape == (2, 3, 128)
+    exp = ref.mpmm_ref(x.reshape(-1, 256), wd, ws, w_bits=8, mode="dequant").reshape(2, 3, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-3)
+
+
+def test_w16_dequant_rejected():
+    x, w = _float_case(8, 128, 128)
+    wd, ws = jnp.zeros((128, 128), jnp.int16), jnp.ones((1, 128), jnp.float32)
+    with pytest.raises(ValueError):
+        ops.mpmm(x, wd, ws, w_bits=16, mode="dequant")
+
+
+def test_auto_dataflow_dispatch():
+    x, w = _float_case(64, 256, 128)
+    wd, ws = ops.pack_weights(w, 8)
+    got = ops.mpmm(x, wd, ws, w_bits=8, dataflow="auto")
+    exp = ref.mpmm_ref(x, wd, ws, w_bits=8, mode="dequant")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-3)
+
+
+def test_xla_backend_matches_pallas():
+    x, w = _float_case(32, 256, 128)
+    wd, ws = ops.pack_weights(w, 4)
+    a = ops.mpmm(x, wd, ws, w_bits=4, backend="pallas")
+    b = ops.mpmm(x, wd, ws, w_bits=4, backend="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)

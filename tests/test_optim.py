@@ -1,0 +1,74 @@
+"""Optimizers: convergence on a quadratic, 8-bit fidelity, adafactor memory."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adamw, adamw8bit
+
+
+def _quadratic_problem(seed=0, d=64):
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=(d, d)), jnp.float32)
+    params = {"w": jnp.zeros((d, d), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2) + jnp.mean((p["b"] - 1.0) ** 2)
+
+    return params, loss
+
+
+@pytest.mark.parametrize("make", [adamw, adamw8bit, adafactor])
+def test_loss_decreases(make):
+    params, loss = _quadratic_problem()
+    init, update = make()
+    state = init(params)
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        upd, state = update(grads, state, params, lr=0.05)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adamw8bit_tracks_adamw():
+    params, loss = _quadratic_problem(seed=1)
+    i8, u8 = adamw8bit(wd=0.0)
+    i32, u32 = adamw(wd=0.0)
+    p8, s8 = dict(params), i8(params)
+    p32, s32 = dict(params), i32(params)
+    for _ in range(30):
+        g8 = jax.grad(loss)(p8)
+        g32 = jax.grad(loss)(p32)
+        up8, s8 = u8(g8, s8, p8, lr=0.05)
+        up32, s32 = u32(g32, s32, p32, lr=0.05)
+        p8 = jax.tree.map(lambda p, u: p + u, p8, up8)
+        p32 = jax.tree.map(lambda p, u: p + u, p32, up32)
+    # trajectories agree to quantization tolerance
+    d = float(jnp.max(jnp.abs(p8["w"] - p32["w"])))
+    assert d < 0.15, d
+    assert float(loss(p8)) < 0.5 * float(loss(params))
+
+
+def test_state_memory_regimes():
+    params = {"w": jnp.zeros((256, 512), jnp.float32)}
+
+    def state_bytes(init):
+        st = init(params)
+        return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(st))
+
+    b_adam = state_bytes(adamw()[0])
+    b_8bit = state_bytes(adamw8bit()[0])
+    b_fact = state_bytes(adafactor()[0])
+    n = 256 * 512
+    assert b_adam >= 8 * n  # fp32 m+v
+    assert b_8bit < 0.35 * b_adam  # int8 payload + block scales
+    assert b_fact < 0.02 * b_adam  # rows+cols only
+
+
+def test_adafactor_factored_shapes():
+    init, _ = adafactor()
+    st = init({"w": jnp.zeros((16, 32)), "v": jnp.zeros((8,))})
+    assert st.inner["w"]["r"].shape == (16,)
+    assert st.inner["w"]["c"].shape == (32,)
+    assert st.inner["v"]["v"].shape == (8,)

@@ -1,0 +1,91 @@
+"""Quantization substrate: packing round-trips, error bounds, QTensor."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.precision import Precision
+from repro.quant import (
+    QTensor,
+    dequantize,
+    fake_quantize,
+    pack_int4,
+    quantize,
+    quantize_per_channel,
+    unpack_int4,
+)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    hnp.arrays(
+        np.int8,
+        hnp.array_shapes(min_dims=1, max_dims=3, min_side=2, max_side=16).filter(
+            lambda s: s[-1] % 2 == 0
+        ),
+        elements=st.integers(-8, 7),
+    )
+)
+def test_pack_unpack_roundtrip(arr):
+    packed = pack_int4(jnp.asarray(arr))
+    assert packed.shape[-1] == arr.shape[-1] // 2
+    back = unpack_int4(packed)
+    np.testing.assert_array_equal(np.asarray(back), arr)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    hnp.arrays(
+        np.float32,
+        st.tuples(st.integers(2, 8), st.integers(2, 32).map(lambda x: 2 * x)),
+        elements=st.floats(-100, 100, width=32),
+    ),
+    st.sampled_from([Precision.INT4, Precision.INT8, Precision.INT16]),
+)
+def test_quantize_error_bound(arr, prec):
+    x = jnp.asarray(arr)
+    q = quantize(x, prec)
+    deq = dequantize(q)
+    # symmetric absmax quantization error <= scale/2 elementwise
+    bound = float(q.scale.reshape(())) / 2 + 1e-6
+    assert float(jnp.max(jnp.abs(deq - x))) <= bound
+
+
+def test_per_channel_scales_beat_per_tensor():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 8)) * np.array([0.01, 1, 100, 0.1, 10, 1, 1, 1]))
+    pt = dequantize(quantize(x, Precision.INT8))
+    pc = dequantize(quantize_per_channel(x, Precision.INT8, channel_axis=-1))
+    err_pt = float(jnp.mean(jnp.abs(pt - x)))
+    err_pc = float(jnp.mean(jnp.abs(pc - x)))
+    assert err_pc < err_pt
+
+
+def test_int4_packed_payload_halves():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(16, 32)), jnp.float32)
+    q4 = quantize(x, Precision.INT4)
+    q8 = quantize(x, Precision.INT8)
+    assert q4.packed and q4.data.shape == (16, 16)
+    assert q4.logical_shape == (16, 32)
+    assert q4.data.size == q8.data.size // 2
+
+
+def test_qtensor_pytree():
+    import jax
+
+    x = jnp.ones((4, 8))
+    q = quantize(x, Precision.INT8)
+    leaves, treedef = jax.tree_util.tree_flatten(q)
+    q2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(q2, QTensor) and q2.precision == q.precision
+
+
+def test_fake_quantize_idempotent_on_grid():
+    # values already on the quant grid survive exactly
+    prec = Precision.INT8
+    scale = 0.5
+    x = jnp.asarray([-3.0, -0.5, 0.0, 1.5, 63.5])
+    fq = fake_quantize(x, prec)
+    fq2 = fake_quantize(fq, prec)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(fq2), rtol=1e-6)

@@ -1,0 +1,82 @@
+"""The multi-precision multiplier-combination identity (paper Sec. II-B):
+sixteen 4-bit multipliers == 1x16b / 4x8b / 16x4b MACs, bit-exactly."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.precision import PE_MULTIPLIERS_4B, Precision
+from repro.core.sau import SAU, digit_compose, digit_decompose, pe_mac, pe_multiply
+
+PRECS = [Precision.INT4, Precision.INT8, Precision.INT16]
+
+
+def _rng_ints(prec, shape, seed=0):
+    s = prec.spec
+    return np.random.default_rng(seed).integers(s.qmin, s.qmax + 1, shape).astype(np.int32)
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(-(2 ** 15), 2 ** 15 - 1), st.sampled_from([4, 8, 16]))
+def test_digit_roundtrip(x, bits):
+    qmin, qmax = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    x = max(qmin, min(qmax, x))
+    digits = digit_decompose(jnp.asarray([x]), bits)
+    assert digits.shape[-1] == bits // 4
+    back = digit_compose(digits)
+    assert int(back[0]) == x
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.data(), st.sampled_from(PRECS))
+def test_pe_multiply_equals_direct(data, prec):
+    s = prec.spec
+    a = data.draw(st.integers(s.qmin, s.qmax))
+    b = data.draw(st.integers(s.qmin, s.qmax))
+    got = pe_multiply(jnp.asarray([a]), jnp.asarray([b]), prec)
+    assert int(got[0]) == a * b
+    # the mode uses exactly the sixteen 4-bit multipliers
+    assert s.digits * s.digits * s.macs_per_pe == PE_MULTIPLIERS_4B
+
+
+@pytest.mark.parametrize("prec", PRECS)
+def test_pe_multiply_extremes(prec):
+    s = prec.spec
+    vals = jnp.asarray([s.qmin, s.qmax, -1, 0, 1], jnp.int32)
+    got = pe_multiply(vals[:, None], vals[None, :], prec)
+    exp = vals[:, None].astype(jnp.int64) * vals[None, :].astype(jnp.int64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("prec", PRECS)
+def test_pe_mac_accumulates(prec):
+    acc = jnp.asarray([7], jnp.int32)
+    out = pe_mac(acc, jnp.asarray([3]), jnp.asarray([-5]), prec)
+    assert int(out[0]) == 7 - 15
+
+
+@pytest.mark.parametrize("prec", PRECS)
+@pytest.mark.parametrize("bit_accurate", [False, True])
+def test_sau_matmul(prec, bit_accurate):
+    sau = SAU(tile_r=4, tile_c=4)
+    a = jnp.asarray(_rng_ints(prec, (4, 6), 1))
+    b = jnp.asarray(_rng_ints(prec, (6, 4), 2))
+    acc = jnp.zeros((4, 4), jnp.int32)
+    out = sau(acc, a, b, prec, bit_accurate=bit_accurate)
+    exp = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    np.testing.assert_array_equal(np.asarray(out), exp.astype(np.int32))
+
+
+def test_sau_rejects_oversized():
+    sau = SAU(tile_r=2, tile_c=2)
+    with pytest.raises(ValueError):
+        sau(jnp.zeros((4, 4), jnp.int32), jnp.zeros((4, 3), jnp.int32),
+            jnp.zeros((3, 4), jnp.int32), Precision.INT8)
+
+
+def test_sau_cycles_model():
+    sau = SAU(tile_r=4, tile_c=4)
+    c1 = sau.cycles(4, 4, 100, Precision.INT8)
+    c2 = sau.cycles(8, 4, 100, Precision.INT8)  # two row tiles
+    assert c2 == 2 * c1
