@@ -1,4 +1,5 @@
-"""Benchmark harness: one section per paper table/figure + kernel microbench.
+"""Benchmark harness: one section per paper table/figure + kernel microbench
++ the serving-engine throughput sweep.
 
 Prints ``name,value,paper_value,rel_err`` CSV per reproduction row and
 ``name,us_per_call,derived`` for the microbenchmarks.  Roofline tables come
@@ -9,7 +10,7 @@ from __future__ import annotations
 
 
 def main() -> None:
-    from benchmarks import fig3, fig4, kernel_bench, table1
+    from benchmarks import fig3, fig4, kernel_bench, serve_bench, table1
 
     print("# === Table I (SPEED vs Ara synthesized/peak) ===")
     print("name,model,paper,rel_err")
@@ -33,6 +34,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in kernel_bench.rows():
         print(f"{name},{us:.1f},{derived:.2f}")
+
+    print("\n# === Serving engine (continuous batching, tokens/s by batch & precision mix) ===")
+    print("name,decode_tok_per_s,mean_batch_occupancy")
+    for name, tok_s, occ in serve_bench.rows():
+        print(f"{name},{tok_s:.1f},{occ:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,82 @@
+"""Serving-engine throughput sweep: tokens/s vs batch size vs precision mix.
+
+Continuous-batching decode throughput for the multi-precision engine on a
+tiny CPU-sized model — the point is the *shape* of the curves (occupancy
+scaling, W4 vs W8 grouping overhead), not absolute CPU numbers; real-TPU
+serving throughput comes from the roofline path.
+
+Importable: ``rows()`` yields (name, decode_tok_per_s, note) tuples, the
+same contract as the other benchmark sections.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+BATCH_SIZES = (1, 4, 16)
+MIXES = {
+    "w8": [8],
+    "w4": [4],
+    "w4+w8": [4, 8],
+}
+PROMPT_LEN = 8
+NEW_TOKENS = 8
+
+
+@functools.lru_cache(maxsize=1)
+def _setup():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as model_lib
+
+    cfg = dataclasses.replace(
+        get_config("yi-9b").reduced(),
+        n_layers=2, d_model=128, d_ff=256, n_heads=4, n_kv_heads=2,
+        head_dim=32, vocab=1024,
+    )
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_one(batch_size: int, mix: list[int]) -> tuple[float, float]:
+    import numpy as np
+
+    from repro.serve import ServeEngine
+
+    cfg, params = _setup()
+    page_size = 8
+    pages_per_slot = -(-(PROMPT_LEN + NEW_TOKENS) // page_size)
+    engine = ServeEngine(
+        cfg, params,
+        max_slots=batch_size,
+        num_pages=batch_size * pages_per_slot,
+        page_size=page_size,
+    )
+    rng = np.random.default_rng(0)
+    for i in range(batch_size):
+        engine.submit(
+            rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
+            NEW_TOKENS,
+            w_bits=mix[i % len(mix)],
+            kv_bits=8,
+        )
+    engine.run()
+    s = engine.stats
+    return s.decode_tok_per_s, s.mean_batch_occupancy
+
+
+def rows():
+    """(name, decode_tok_per_s, mean_batch_occupancy) per configuration."""
+    out = []
+    for mix_name, mix in MIXES.items():
+        for bsz in BATCH_SIZES:
+            tok_s, occ = _run_one(bsz, mix)
+            out.append((f"serve_{mix_name}_b{bsz}", tok_s, occ))
+    return out
+
+
+if __name__ == "__main__":
+    print("name,decode_tok_per_s,mean_batch_occupancy")
+    for name, tok_s, occ in rows():
+        print(f"{name},{tok_s:.1f},{occ:.2f}")

@@ -20,11 +20,14 @@ SPEED schedules a convolution layer onto the SAU with one of two strategies:
     (paper Fig. 3: CF wins conv1x1, FF wins K>=3).
 
 This module produces geometry/traffic statistics (`ScheduleStats`) consumed by
-`core/perfmodel.py` (cycles/energy) and mirrored by the Pallas conv kernel's
-grid orders (`kernels/mpconv.py`).  The same selector drives matmul schedule
-choice for the quantized LM serving path (see quant/qlayers.py): a matmul is
-a 1x1 convolution, so "CF" maps to accumulate-in-register (K-inner) tiling
-and "FF" to output-stationary-with-spill (K-outer) tiling.
+`core/perfmodel.py` (cycles/energy) and mirrored by the Pallas conv path's
+grid orders (`kernels/ops.py::mpconv`, which lowers onto the `kernels/mpmm.py`
+matmul core).  The same selector drives matmul schedule choice for the
+quantized LM serving path (`models/layers.py::dense` dispatching quantized
+weights from `models/layers.py::quantize_dense_weight` through
+`kernels/ops.py::mpmm`): a matmul is a 1x1 convolution, so "CF" maps to
+accumulate-in-register (K-inner) tiling and "FF" to
+output-stationary-with-spill (K-outer) tiling.
 """
 from __future__ import annotations
 

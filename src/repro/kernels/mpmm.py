@@ -48,6 +48,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["mpmm_pallas", "DEFAULT_BLOCKS"]
 
+# jax < 0.5 names it TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 DEFAULT_BLOCKS = dict(bm=128, bn=128, bk=512)
 
 
@@ -213,7 +216,7 @@ def mpmm_pallas(
             out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
             out_shape=jax.ShapeDtypeStruct((m_sz, n_sz), out_dtype),
             scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=_CompilerParams(
                 dimension_semantics=("parallel", "parallel", "arbitrary")
             ),
             interpret=interpret,
@@ -237,7 +240,7 @@ def mpmm_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda k, m, n: (m, n)),
         out_shape=jax.ShapeDtypeStruct((m_sz, n_sz), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "parallel", "parallel")
         ),
         interpret=interpret,

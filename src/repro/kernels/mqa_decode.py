@@ -24,6 +24,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["mqa_decode_pallas"]
 
+# jax < 0.5 names it TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 _NEG_INF = -1e30
 
 
@@ -134,7 +137,7 @@ def mqa_decode_pallas(
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -1,13 +1,17 @@
-"""Serving launcher: multi-precision quantized inference (the paper's use
-case) with the batched request engine.
+"""Serving launcher: continuous-batching multi-precision quantized inference
+(the paper's use case at traffic).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
-        --requests 8 --new-tokens 16 [--w-bits 4]
+        --requests 8 --new-tokens 16 --precision-mix 4,8
+
+``--precision-mix`` assigns weight precisions to requests round-robin, so a
+single engine decodes W4A16 and W8A16 requests in the same step (one batched
+kernel call per precision group).  ``--w-bits`` forces one precision for all
+requests (0 = arch default); ``--no-quantize`` serves raw bf16 weights.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 
 import jax
@@ -21,47 +25,99 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--batch-size", type=int, default=4, help="concurrent slots")
+    ap.add_argument("--page-size", type=int, default=16, help="KV page tokens")
     ap.add_argument("--w-bits", type=int, default=0, help="0 = arch default")
+    ap.add_argument(
+        "--precision-mix", default="",
+        help="comma-separated w_bits cycled over requests, e.g. '4,8'",
+    )
+    ap.add_argument("--kv-bits", type=int, default=0, help="0 = arch default")
     ap.add_argument("--no-quantize", action="store_true")
     args = ap.parse_args()
 
     from repro.configs import get_config
     from repro.models import transformer as model_lib
-    from repro.train.server import Request, Server
+    from repro.serve import ServeEngine
 
     arch = get_config(args.arch)
     if args.reduced:
         arch = arch.reduced()
-    if args.w_bits:
-        arch = dataclasses.replace(arch, serve_w_bits=args.w_bits)
+
+    if args.no_quantize:
+        mix = [16]
+    elif args.precision_mix:
+        mix = [int(b) for b in args.precision_mix.split(",")]
+    else:
+        mix = [args.w_bits or arch.serve_w_bits]
+    kv_bits = args.kv_bits or arch.serve_kv_bits
 
     params = model_lib.init_params(arch, jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.new_tokens + arch.prefix_len + 8
-    srv = Server(
-        arch, params, batch_size=args.batch_size, max_len=max_len,
-        quantize=not args.no_quantize,
-    )
     rng = np.random.default_rng(0)
+
+    if not ServeEngine.supports(arch):
+        # recurrent-cache archs: static-wave fallback (single precision)
+        from repro.train.server import Request, Server
+
+        srv = Server(
+            arch, params, batch_size=args.batch_size, max_len=max_len,
+            quantize=not args.no_quantize,
+        )
+        reqs = [
+            Request(
+                rid=i,
+                prompt=rng.integers(0, arch.vocab, args.prompt_len).astype(np.int32),
+                max_new_tokens=args.new_tokens,
+            )
+            for i in range(args.requests)
+        ]
+        srv.serve(reqs)
+        stats = srv.stats
+        print(json.dumps({
+            "arch": arch.name,
+            "scheduler": "static-wave (family not supported by paged engine)",
+            "w_bits": arch.serve_w_bits if not args.no_quantize else 16,
+            "requests": len(reqs),
+            "tokens_out": stats.tokens_out,
+            "prefill_s": round(stats.prefill_s, 3),
+            "decode_s": round(stats.decode_s, 3),
+            "decode_tok_per_s": round(stats.tokens_out / max(stats.decode_s, 1e-9), 1),
+            "sample_output": reqs[0].out_tokens[:8],
+        }, indent=1))
+        return
+
+    pages_per_slot = -(-max_len // args.page_size)
+    engine = ServeEngine(
+        arch, params,
+        max_slots=args.batch_size,
+        num_pages=args.batch_size * pages_per_slot,
+        page_size=args.page_size,
+    )
     reqs = [
-        Request(
-            rid=i,
-            prompt=rng.integers(0, arch.vocab, args.prompt_len).astype(np.int32),
-            max_new_tokens=args.new_tokens,
+        engine.submit(
+            rng.integers(0, arch.vocab, args.prompt_len).astype(np.int32),
+            args.new_tokens,
+            w_bits=mix[i % len(mix)],
+            kv_bits=kv_bits,
         )
         for i in range(args.requests)
     ]
-    srv.serve(reqs)
-    stats = srv.stats
+    engine.run()
+    stats = engine.stats
     print(json.dumps({
         "arch": arch.name,
-        "w_bits": arch.serve_w_bits,
-        "kv_bits": arch.serve_kv_bits,
+        "w_bits_mix": mix,
+        "kv_bits": kv_bits,
         "requests": len(reqs),
         "tokens_out": stats.tokens_out,
         "prefill_s": round(stats.prefill_s, 3),
         "decode_s": round(stats.decode_s, 3),
-        "decode_tok_per_s": round(stats.tokens_out / max(stats.decode_s, 1e-9), 1),
+        "decode_tok_per_s": round(stats.decode_tok_per_s, 1),
+        "decode_group_calls": {f"w{w}kv{k}": n for (w, k), n in stats.group_calls.items()},
+        "mixed_precision_steps": stats.mixed_precision_steps,
+        "mean_batch_occupancy": round(stats.mean_batch_occupancy, 2),
+        "preemptions": stats.preemptions,
         "sample_output": reqs[0].out_tokens[:8],
     }, indent=1))
 

@@ -1,0 +1,36 @@
+"""Continuous-batching multi-precision serving engine.
+
+The paper's pitch — one multi-precision datapath serving 4/8/16-bit work —
+applied at the serving layer: every in-flight request picks its own weight
+precision (W4A16 / W8A16 / bf16) and KV-cache precision (int8 / bf16), and
+the engine still batches them.  Same-precision requests are grouped into one
+batched kernel call per decode step (mpmm for the projections, the
+mqa-decode contract for attention), so a mixed-precision request stream
+decodes in a handful of batched calls instead of one model call per request.
+
+Layers (bottom-up):
+
+  * request.py   — ``ServeRequest`` lifecycle (WAITING → RUNNING → FINISHED).
+  * kv_cache.py  — ``PagedKVCache``: fixed-size page pool + per-request page
+    tables, int8-with-scales or bf16 payloads.
+  * scheduler.py — FCFS admission with head-of-line blocking (no starvation)
+    and youngest-first preemption when the page pool runs dry.
+  * decode.py    — jit'd ragged batched decode step over gathered pages.
+  * engine.py    — ``ServeEngine`` tying it together; ``EngineStats``.
+
+Entry points: ``repro.launch.serve`` (CLI), ``repro.train.server.Server``
+(compat wrapper), ``examples/serve_quantized.py``, ``benchmarks/serve_bench``.
+"""
+from repro.serve.engine import EngineStats, ServeEngine
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.request import RequestState, ServeRequest
+from repro.serve.scheduler import Scheduler
+
+__all__ = [
+    "EngineStats",
+    "PagedKVCache",
+    "RequestState",
+    "Scheduler",
+    "ServeEngine",
+    "ServeRequest",
+]

@@ -1,0 +1,114 @@
+"""Jit'd ragged batched decode step over a paged KV cache.
+
+One call decodes one token for every request in a same-precision group.  The
+group's page tables are gathered into a contiguous [L, B, S, Hkv, D] view
+(S = table_width * page_size), the new token's K/V is inserted at each
+request's own position, and attention runs through
+``models.attention.decode_attention`` — the same per-row-length contract the
+Pallas ``mqa_decode`` kernel implements on real TPUs.  All weight matmuls go
+through ``models.layers.dense``, which dispatches quantized weights to the
+``mpmm`` multi-precision kernel path, so a W4A16 group and a W8A16 group
+each cost one batched kernel call per projection per layer.
+
+Unlike ``models.transformer.decode_step`` (one shared scalar position), every
+row carries its own cache length — requests that joined the batch at
+different times decode together.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import transformer as model_lib
+from repro.models.layers import apply_rope, dense, rms_norm
+
+
+def _gather_pages(pool: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """[L, P, ps, ...] pool + [B, W] page tables -> [L, B, W*ps, ...]."""
+    g = pool[:, tables]  # [L, B, W, ps, ...]
+    l, b, w, ps = g.shape[:4]
+    return g.reshape(l, b, w * ps, *g.shape[4:])
+
+
+def paged_decode_step(
+    params,
+    tokens: jnp.ndarray,  # [B, 1] int32 — last generated token per request
+    lengths: jnp.ndarray,  # [B] int32 — tokens already in cache (new token's position)
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    pool_k: jnp.ndarray,  # [L, P, ps, Hkv, D]
+    pool_v: jnp.ndarray,
+    pool_ks,  # [L, P, ps, Hkv, 1] f32 or None (kv_bits == 16)
+    pool_vs,
+    *,
+    cfg: ArchConfig,
+    mesh=None,
+):
+    """Returns (logits [B, V], new_kv) where new_kv is the new token's
+    per-layer K/V (k, v[, k_scale, v_scale]) with k/v [L, B, Hkv, D] — the
+    caller scatters it into the page pool.
+
+    Not jit'd here: the engine jits a closure over its mesh (mesh objects
+    aren't hashable jit statics), mirroring how it wraps prefill."""
+    quant = cfg.serve_kv_bits < 16
+    b = tokens.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]  # [B, 1, D]
+    posv = lengths[:, None]  # [B, 1] per-row positions
+    rows = jnp.arange(b)
+
+    ck_all = _gather_pages(pool_k, tables)
+    cv_all = _gather_pages(pool_v, tables)
+    if quant:
+        cks_all = _gather_pages(pool_ks, tables)
+        cvs_all = _gather_pages(pool_vs, tables)
+
+    windows = model_lib._per_layer_window(cfg, cfg.n_layers)
+
+    def layer(carry, xs):
+        x = carry
+        p = xs["p"]
+        win = xs["win"] if windows is not None else (cfg.window if cfg.window else None)
+        xn = rms_norm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)
+        q = dense(xn, p["wq"]).reshape(b, 1, h, hd)
+        k = dense(xn, p["wk"]).reshape(b, 1, hkv, hd)
+        v = dense(xn, p["wv"]).reshape(b, 1, hkv, hd)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+        if quant:
+            kq, ksc = model_lib._quantize_token_kv(k, cfg.serve_kv_bits)
+            vq, vsc = model_lib._quantize_token_kv(v, cfg.serve_kv_bits)
+            ck = xs["k"].at[rows, lengths].set(kq[:, 0])
+            cv = xs["v"].at[rows, lengths].set(vq[:, 0])
+            cks = xs["ks"].at[rows, lengths].set(ksc[:, 0])
+            cvs = xs["vs"].at[rows, lengths].set(vsc[:, 0])
+            o = attn_mod.decode_attention(
+                q, ck, cv, lengths + 1, window=win, k_scale=cks, v_scale=cvs
+            )
+            new_kv = (kq[:, 0], vq[:, 0], ksc[:, 0], vsc[:, 0])
+        else:
+            ck = xs["k"].at[rows, lengths].set(k[:, 0].astype(xs["k"].dtype))
+            cv = xs["v"].at[rows, lengths].set(v[:, 0].astype(xs["v"].dtype))
+            o = attn_mod.decode_attention(q, ck, cv, lengths + 1, window=win)
+            new_kv = (k[:, 0], v[:, 0])
+        x = x + dense(o.reshape(b, 1, h * hd), p["wo"])
+        if cfg.family == "moe":
+            m, _ = model_lib._moe_block(p, x, cfg, mesh)
+            x = x + m
+        else:
+            x = x + model_lib._mlp_block(p, x, cfg)
+        return x, new_kv
+
+    xs = {"p": params["blocks"], "k": ck_all, "v": cv_all}
+    if quant:
+        xs["ks"] = cks_all
+        xs["vs"] = cvs_all
+    if windows is not None:
+        xs["win"] = windows
+    x, new_kv = jax.lax.scan(layer, x, xs)
+
+    x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    logits = dense(x[:, -1], params["unembed"]).astype(jnp.float32)
+    logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30)
+    return logits, new_kv

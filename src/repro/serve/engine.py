@@ -1,0 +1,323 @@
+"""ServeEngine: continuous batching with per-request precision.
+
+One engine step:
+
+  1. **Finish/free** — requests that hit their token budget leave the batch
+     and return their KV pages to the pool.
+  2. **Admit + prefill** — waiting requests are admitted FCFS while batch
+     slots and KV pages last (head-of-line blocking, see scheduler.py).
+     Admitted requests with identical (w_bits, kv_bits, prompt_len) prefill
+     as one batched ``models.transformer.prefill`` call; the resulting
+     contiguous cache rows are scattered into their page tables and the
+     prefill logits yield each request's first token.
+  3. **Grow/evict** — any running request about to cross a page boundary
+     gets one more page; if the pool is dry, the youngest running request on
+     that pool is preempted (pages freed, recompute-on-readmit — greedy
+     decoding makes the replay deterministic).
+  4. **Decode** — running requests are grouped by (w_bits, kv_bits); each
+     group makes ONE ``paged_decode_step`` call (batched mpmm projections +
+     ragged-length cache attention), then its new K/V token is scattered
+     back into the pool.  A step that decodes ≥2 different precision groups
+     is counted in ``stats.mixed_precision_steps``.
+
+Requests never wait for batch-mates: a request admitted at step N starts
+decoding at step N alongside requests admitted long before.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as model_lib
+from repro.serve.decode import paged_decode_step
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.request import RequestState, ServeRequest
+from repro.serve.scheduler import Scheduler
+
+_SUPPORTED_FAMILIES = ("dense", "vlm", "audio", "moe")
+
+
+@dataclass
+class EngineStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    decode_steps: int = 0  # batched decode kernel-group calls
+    engine_steps: int = 0
+    tokens_out: int = 0
+    prefills: int = 0
+    preemptions: int = 0
+    mixed_precision_steps: int = 0  # engine steps decoding >= 2 precision groups
+    occupancy_sum: int = 0  # sum of decode group sizes (mean = /decode_steps)
+    group_calls: dict = field(default_factory=dict)  # (w_bits, kv_bits) -> calls
+
+    @property
+    def mean_batch_occupancy(self) -> float:
+        return self.occupancy_sum / max(self.decode_steps, 1)
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_out / max(self.decode_s, 1e-9)
+
+
+class ServeEngine:
+    @staticmethod
+    def supports(cfg: ArchConfig) -> bool:
+        """Continuous batching needs every layer's cache in one paged pool:
+        attention families only, and no unstacked leading dense MoE blocks."""
+        return cfg.family in _SUPPORTED_FAMILIES and not (
+            cfg.family == "moe" and cfg.first_dense
+        )
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        max_slots: int = 8,
+        num_pages: Optional[int] = None,
+        page_size: int = 16,
+        mesh=None,
+    ):
+        if not self.supports(cfg):
+            raise NotImplementedError(
+                f"ServeEngine needs a uniform attention-cache stack "
+                f"(families {_SUPPORTED_FAMILIES}, no leading dense MoE blocks); "
+                f"{cfg.name} is {cfg.family!r}"
+                + (" with first_dense" if cfg.first_dense else "")
+                + " — use repro.train.server.Server, which falls back to wave batching"
+            )
+        self.cfg = cfg
+        self.mesh = mesh
+        self.page_size = page_size
+        self.num_pages = num_pages if num_pages is not None else max_slots * 32
+        self._sched = Scheduler(max_slots)
+        self._params = {16: params}  # w_bits -> param tree (quantized lazily)
+        self._caches: dict[int, PagedKVCache] = {}  # kv_bits -> page pool
+        self._next_arrival = 0
+        self._next_rid = 0
+        self.finished: list[ServeRequest] = []
+        self._prefill_fn = functools.partial(
+            jax.jit, static_argnames=("cfg", "max_len")
+        )(lambda p, b, cfg, max_len: model_lib.prefill(p, b, cfg, max_len, mesh))
+        self._decode_fn = functools.partial(jax.jit, static_argnames=("cfg",))(
+            lambda p, t, ln, tb, pk, pv, pks, pvs, cfg: paged_decode_step(
+                p, t, ln, tb, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
+            )
+        )
+        self.stats = EngineStats()
+
+    # -------------------------------------------------------------- plumbing
+    def params_for(self, w_bits: int):
+        if w_bits not in self._params:
+            self._params[w_bits] = model_lib.quantize_params(self._params[16], w_bits)
+        return self._params[w_bits]
+
+    def cache_for(self, kv_bits: int) -> PagedKVCache:
+        if kv_bits not in self._caches:
+            self._caches[kv_bits] = PagedKVCache(
+                self.cfg,
+                num_pages=self.num_pages,
+                page_size=self.page_size,
+                kv_bits=kv_bits,
+            )
+        return self._caches[kv_bits]
+
+    def _group_cfg(self, kv_bits: int) -> ArchConfig:
+        return dataclasses.replace(self.cfg, serve_kv_bits=kv_bits)
+
+    def _prefill_len(self, req: ServeRequest) -> int:
+        return self.cfg.prefix_len + len(req.feed_tokens())
+
+    def _max_ctx(self, req: ServeRequest) -> int:
+        return self.cfg.prefix_len + len(req.prompt) + req.max_new_tokens
+
+    # ---------------------------------------------------------------- submit
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        *,
+        w_bits: Optional[int] = None,
+        kv_bits: Optional[int] = None,
+        rid: Optional[int] = None,
+    ) -> ServeRequest:
+        w_bits = self.cfg.serve_w_bits if w_bits is None else w_bits
+        kv_bits = self.cfg.serve_kv_bits if kv_bits is None else kv_bits
+        if w_bits not in (4, 8, 16):
+            raise ValueError(f"w_bits must be 4, 8 or 16, got {w_bits}")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if rid is not None:
+            live = {
+                r.rid for r in (*self._sched.waiting, *self._sched.running)
+            }
+            if rid in live:
+                raise ValueError(f"rid {rid} is already in flight")
+        req = ServeRequest(
+            rid=self._next_rid if rid is None else rid,
+            prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens,
+            w_bits=w_bits,
+            kv_bits=kv_bits,
+            arrival=self._next_arrival,
+        )
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        self._next_arrival += 1
+        cache = self.cache_for(kv_bits)
+        if cache.pages_for(self._max_ctx(req)) > cache.num_pages:
+            raise ValueError(
+                f"request needs {cache.pages_for(self._max_ctx(req))} pages; "
+                f"pool only has {cache.num_pages}"
+            )
+        self._sched.submit(req)
+        return req
+
+    # --------------------------------------------------------------- prefill
+    def _admit_and_prefill(self) -> list[ServeRequest]:
+        reserved: dict[int, int] = {}  # kv_bits -> pages spoken for this round
+
+        def fits(req: ServeRequest) -> bool:
+            cache = self.cache_for(req.kv_bits)
+            need = cache.pages_for(self._prefill_len(req))
+            if cache.num_free - reserved.get(req.kv_bits, 0) < need:
+                return False
+            reserved[req.kv_bits] = reserved.get(req.kv_bits, 0) + need
+            return True
+
+        admitted = self._sched.admit(fits)
+        if not admitted:
+            return []
+        groups: dict[tuple, list[ServeRequest]] = {}
+        for req in admitted:
+            key = (req.w_bits, req.kv_bits, self._prefill_len(req))
+            groups.setdefault(key, []).append(req)
+        t0 = time.perf_counter()
+        for (w_bits, kv_bits, plen), reqs in groups.items():
+            self._prefill_group(reqs, w_bits, kv_bits, plen)
+        self.stats.prefill_s += time.perf_counter() - t0
+        return admitted
+
+    def _prefill_group(self, reqs, w_bits: int, kv_bits: int, plen: int) -> None:
+        cfg_g = self._group_cfg(kv_bits)
+        cache = self.cache_for(kv_bits)
+        max_len = cache.pages_for(plen) * self.page_size
+        tokens = jnp.asarray(np.stack([r.feed_tokens() for r in reqs]))
+        batch = {"tokens": tokens}
+        if self.cfg.prefix_len:
+            from repro.models.frontends import prefix_embeddings
+
+            batch["prefix_emb"] = prefix_embeddings(self.cfg, len(reqs))
+        logits, kv = self._prefill_fn(self.params_for(w_bits), batch, cfg_g, max_len)
+        jax.block_until_ready(logits)
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, req in enumerate(reqs):
+            cache.allocate(req.rid, cache.pages_for(plen))
+            if cache.quantized:
+                cache.write_prompt(
+                    req.rid, kv["k"][:, i], kv["v"][:, i],
+                    kv["k_scale"][:, i], kv["v_scale"][:, i],
+                )
+            else:
+                cache.write_prompt(req.rid, kv["k"][:, i], kv["v"][:, i])
+            req.cache_len = plen
+            if not req.out_tokens:  # fresh request: prefill yields token #1
+                req.out_tokens.append(int(first[i]))
+                self.stats.tokens_out += 1
+            self.stats.prefills += 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                self._finish(req)
+
+    # ---------------------------------------------------------------- decode
+    def _ensure_page_room(self) -> None:
+        """Grow page tables for requests crossing a page boundary; preempt
+        youngest-first when a pool is dry (oldest requests get pages first)."""
+        for req in sorted(self._sched.running, key=lambda r: r.arrival):
+            if req.state is not RequestState.RUNNING:
+                continue
+            cache = self.cache_for(req.kv_bits)
+            while req.cache_len >= cache.capacity_tokens(req.rid):
+                if cache.can_allocate(1):
+                    cache.extend(req.rid, 1)
+                    continue
+                victim = self._sched.pick_victim(kv_bits=req.kv_bits)
+                self._preempt(victim)
+                if victim is req:
+                    break
+
+    def _preempt(self, req: ServeRequest) -> None:
+        self.cache_for(req.kv_bits).free(req.rid)
+        self._sched.preempt(req)
+        self.stats.preemptions += 1
+
+    def _finish(self, req: ServeRequest) -> None:
+        self.cache_for(req.kv_bits).free(req.rid)
+        self._sched.finish(req)
+        self.finished.append(req)
+
+    def _decode_groups(self) -> int:
+        groups: dict[tuple[int, int], list[ServeRequest]] = {}
+        for req in self._sched.running:
+            if req.state is RequestState.RUNNING and req.out_tokens:
+                groups.setdefault(req.group_key, []).append(req)
+        t0 = time.perf_counter()
+        for (w_bits, kv_bits), reqs in sorted(groups.items()):
+            reqs.sort(key=lambda r: r.arrival)
+            cache = self.cache_for(kv_bits)
+            cfg_g = self._group_cfg(kv_bits)
+            rids = [r.rid for r in reqs]
+            positions = np.array([r.cache_len for r in reqs], np.int64)
+            width = max(len(cache.table(r)) for r in rids)
+            width = 1 << (width - 1).bit_length()  # pow2-bucket to limit retraces
+            tables = cache.table_array(rids, width)
+            tokens = jnp.asarray(
+                np.array([[r.out_tokens[-1]] for r in reqs], np.int32)
+            )
+            lengths = jnp.asarray(positions.astype(np.int32))
+            logits, new_kv = self._decode_fn(
+                self.params_for(w_bits), tokens, lengths, tables,
+                cache.k, cache.v, cache.k_scale, cache.v_scale, cfg=cfg_g,
+            )
+            jax.block_until_ready(logits)
+            cache.write_token(rids, positions, new_kv)
+            next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+            for i, req in enumerate(reqs):
+                req.cache_len += 1
+                req.out_tokens.append(int(next_tok[i]))
+                self.stats.tokens_out += 1
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    self._finish(req)
+            self.stats.decode_steps += 1
+            self.stats.occupancy_sum += len(reqs)
+            key = (w_bits, kv_bits)
+            self.stats.group_calls[key] = self.stats.group_calls.get(key, 0) + 1
+        self.stats.decode_s += time.perf_counter() - t0
+        if len(groups) >= 2:
+            self.stats.mixed_precision_steps += 1
+        return len(groups)
+
+    def step(self) -> bool:
+        """One engine iteration; returns True if any work was done."""
+        admitted = self._admit_and_prefill()
+        self._ensure_page_room()
+        n_groups = self._decode_groups()
+        self.stats.engine_steps += 1
+        return bool(admitted) or n_groups > 0
+
+    def run(self) -> list[ServeRequest]:
+        """Drive until every submitted request finishes; returns them
+        (completion order)."""
+        while self._sched.has_work():
+            if not self.step():
+                raise RuntimeError(
+                    "engine stalled: no request can be admitted "
+                    f"(free pages: { {b: c.num_free for b, c in self._caches.items()} })"
+                )
+        return self.finished

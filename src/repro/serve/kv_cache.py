@@ -1,0 +1,175 @@
+"""Paged KV cache: a fixed pool of fixed-size pages + per-request page tables.
+
+The pool is one stacked-leading-layer-dim array per tensor — the same layout
+``models/transformer.py`` uses for its dense cache, with the contiguous
+sequence axis cut into pages:
+
+    k_pages: [L, P, page_size, Hkv, D]   (int8 payload or bf16)
+    k_scale: [L, P, page_size, Hkv, 1]   f32, only when kv_bits < 16
+
+A request owns an ordered list of physical page ids (its *page table*); page
+``i`` of the table holds cache positions ``[i*page_size, (i+1)*page_size)``.
+Pages are allocated at admission (enough for the prompt), extended one page
+at a time as decode crosses a page boundary, and returned to the free list
+when the request finishes or is preempted.  The free list is LIFO so freed
+pages are re-used immediately — fragmentation-free because every page is the
+same size.
+
+Allocation book-keeping is host-side Python (it runs once per engine step);
+the payload arrays live on device and are updated functionally (``.at[]``),
+so the jit'd decode step can consume them directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass
+class PageCacheStats:
+    pages_total: int
+    pages_free: int
+    high_water: int  # max pages simultaneously in use
+
+
+class PagedKVCache:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        *,
+        num_pages: int,
+        page_size: int,
+        kv_bits: int = 8,
+    ):
+        if kv_bits not in (8, 16):
+            raise ValueError(f"kv_bits must be 8 or 16, got {kv_bits}")
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.kv_bits = kv_bits
+        self.quantized = kv_bits < 16
+        n_layers, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        payload_dtype = jnp.int8 if self.quantized else jnp.dtype(cfg.dtype)
+        shape = (n_layers, num_pages, page_size, hkv, hd)
+        self.k = jnp.zeros(shape, payload_dtype)
+        self.v = jnp.zeros(shape, payload_dtype)
+        if self.quantized:
+            sshape = (n_layers, num_pages, page_size, hkv, 1)
+            self.k_scale = jnp.zeros(sshape, jnp.float32)
+            self.v_scale = jnp.zeros(sshape, jnp.float32)
+        else:
+            self.k_scale = None
+            self.v_scale = None
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))  # LIFO
+        self._tables: dict[int, list[int]] = {}
+        self._high_water = 0
+
+    # ------------------------------------------------------------ bookkeeping
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def can_allocate(self, n_pages: int) -> bool:
+        return len(self._free) >= n_pages
+
+    def allocate(self, rid: int, n_pages: int) -> list[int]:
+        if rid in self._tables:
+            raise KeyError(f"request {rid} already holds pages")
+        if not self.can_allocate(n_pages):
+            raise MemoryError(
+                f"need {n_pages} pages, {len(self._free)} free of {self.num_pages}"
+            )
+        pages = [self._free.pop() for _ in range(n_pages)]
+        self._tables[rid] = pages
+        self._note_usage()
+        return pages
+
+    def extend(self, rid: int, n_pages: int = 1) -> list[int]:
+        if not self.can_allocate(n_pages):
+            raise MemoryError(
+                f"need {n_pages} pages, {len(self._free)} free of {self.num_pages}"
+            )
+        pages = [self._free.pop() for _ in range(n_pages)]
+        self._tables[rid].extend(pages)
+        self._note_usage()
+        return pages
+
+    def free(self, rid: int) -> None:
+        for page in reversed(self._tables.pop(rid)):
+            self._free.append(page)
+
+    def table(self, rid: int) -> list[int]:
+        return list(self._tables[rid])
+
+    def capacity_tokens(self, rid: int) -> int:
+        """Cache positions currently addressable by rid's page table."""
+        return len(self._tables[rid]) * self.page_size
+
+    def table_array(self, rids: list[int], width: int) -> jnp.ndarray:
+        """[B, width] int32 page-table matrix, zero-padded (padded entries
+        gather page 0; they are masked out by per-row lengths downstream)."""
+        out = np.zeros((len(rids), width), np.int32)
+        for i, rid in enumerate(rids):
+            t = self._tables[rid]
+            out[i, : len(t)] = t
+        return jnp.asarray(out)
+
+    def stats(self) -> PageCacheStats:
+        return PageCacheStats(self.num_pages, len(self._free), self._high_water)
+
+    def _note_usage(self) -> None:
+        self._high_water = max(self._high_water, self.num_pages - len(self._free))
+
+    # -------------------------------------------------------------- payloads
+    def write_prompt(self, rid: int, k, v, k_scale=None, v_scale=None) -> None:
+        """Scatter a prefilled contiguous cache row into this request's pages.
+
+        k/v: [L, S_pad, Hkv, D] with S_pad == len(table) * page_size (the
+        engine prefills with max_len rounded up to a page multiple).
+        """
+        pages = jnp.asarray(self._tables[rid], jnp.int32)
+        n, ps = len(self._tables[rid]), self.page_size
+        if k.shape[1] != n * ps:
+            raise ValueError(f"prompt cache len {k.shape[1]} != {n}*{ps}")
+
+        def scatter(pool, row):
+            paged = row.reshape(row.shape[0], n, ps, *row.shape[2:])
+            return pool.at[:, pages].set(paged.astype(pool.dtype))
+
+        self.k = scatter(self.k, k)
+        self.v = scatter(self.v, v)
+        if self.quantized:
+            self.k_scale = scatter(self.k_scale, k_scale)
+            self.v_scale = scatter(self.v_scale, v_scale)
+
+    def write_token(self, rids: list[int], positions: np.ndarray, new_kv) -> None:
+        """Write one new token's K/V for a batch of requests.
+
+        positions[i] is the cache position of request rids[i]'s new token;
+        new_kv is (k, v[, k_scale, v_scale]) with k/v [L, B, Hkv, D].
+        """
+        page_ids = np.array(
+            [self._tables[r][p // self.page_size] for r, p in zip(rids, positions)],
+            np.int32,
+        )
+        offs = jnp.asarray(positions % self.page_size, jnp.int32)
+        page_ids = jnp.asarray(page_ids)
+
+        def scatter(pool, new):
+            return pool.at[:, page_ids, offs].set(new.astype(pool.dtype))
+
+        if self.quantized:
+            k, v, ks, vs = new_kv
+            self.k_scale = scatter(self.k_scale, ks)
+            self.v_scale = scatter(self.v_scale, vs)
+        else:
+            k, v = new_kv
+        self.k = scatter(self.k, k)
+        self.v = scatter(self.v, v)

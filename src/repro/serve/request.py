@@ -1,0 +1,57 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A request carries its own precision choice — ``w_bits`` selects which
+quantized weight set (W4/W8 via ``models.transformer.quantize_params``, 16 =
+raw bf16) its kernel calls run against, ``kv_bits`` selects the KV-cache
+payload (8 = int8 + per-(token, head) scales, 16 = bf16).  The engine groups
+same-``group_key`` requests into one batched kernel call per decode step.
+
+Decoding is greedy, which is what makes recompute-style preemption safe: a
+preempted request re-prefills ``prompt + out_tokens[:-1]`` and continues
+deterministically.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int
+    w_bits: int = 8  # weight precision for this request's kernel calls
+    kv_bits: int = 8  # KV-cache payload precision (8=int8+scales, 16=bf16)
+    arrival: int = 0  # engine-assigned admission-order ticket (FCFS key)
+    state: RequestState = RequestState.WAITING
+    out_tokens: list[int] = field(default_factory=list)
+    cache_len: int = 0  # tokens currently materialized in the KV cache
+    preemptions: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.state is RequestState.FINISHED
+
+    @property
+    def group_key(self) -> tuple[int, int]:
+        """(w_bits, kv_bits) — requests with equal keys batch together."""
+        return (self.w_bits, self.kv_bits)
+
+    def feed_tokens(self) -> np.ndarray:
+        """Tokens a (re-)prefill must materialize in the cache: the prompt
+        plus every generated token already *fed* back to the model (all but
+        the newest, which the next decode step feeds)."""
+        if self.out_tokens:
+            return np.concatenate(
+                [self.prompt, np.asarray(self.out_tokens[:-1], np.int32)]
+            )
+        return self.prompt

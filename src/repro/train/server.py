@@ -1,24 +1,29 @@
-"""Serving engine: batched request scheduling over the quantized model.
+"""Synchronous serving wrapper over the continuous-batching engine.
 
-The paper's purpose — efficient multi-precision inference — lands here: the
-engine holds int4/int8-quantized weights (quantize_params) and an int8 KV
-cache, admits requests into a fixed-size batch, prefills admitted prompts,
-then decodes steps for the whole batch until every request hits its token
-budget (continuous-batching-lite: finished slots are refilled from the queue
-between decode bursts).
+Historically this module WAS the serving engine (static waves of
+``batch_size`` requests).  The engine proper now lives in ``repro.serve``
+— per-request weight/KV precision, paged KV cache, FCFS admission with
+preemption, same-precision kernel-call grouping — and this module keeps the
+small blocking API the launcher, examples and tests were built on: construct
+a ``Server``, hand it a list of ``Request``s, get them back completed.
+
+Architectures the paged engine can't host (ssm / hybrid recurrent caches,
+MoE with leading dense blocks — see ``ServeEngine.supports``) fall back to
+the original static-wave scheduler over ``models.transformer``'s prefill /
+decode_step, so every registered arch still serves.
+
+Greedy token streams are unchanged from the wave engine: prefill yields each
+request's first token, every decode step feeds the newest token back.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import transformer as model_lib
+from repro.serve.engine import ServeEngine
 
 
 @dataclass
@@ -39,6 +44,11 @@ class ServeStats:
 
 
 class Server:
+    """Blocking facade: submits every request to a ``ServeEngine`` and runs
+    it to completion.  ``batch_size`` bounds concurrent slots (continuous
+    batching refills them as requests finish — no wave barriers), ``max_len``
+    sizes the KV page pool so every slot can reach it."""
+
     def __init__(
         self,
         arch: ArchConfig,
@@ -48,23 +58,77 @@ class Server:
         max_len: int = 512,
         quantize: bool = True,
         mesh=None,
+        page_size: int = 16,
     ):
         self.arch = arch
         self.mesh = mesh
         self.batch_size = batch_size
         self.max_len = max_len
-        self.params = (
-            model_lib.quantize_params(params, arch.serve_w_bits) if quantize else params
-        )
-        self._prefill = jax.jit(
-            lambda p, b: model_lib.prefill(p, b, arch, max_len, mesh),
-        )
-        self._decode = jax.jit(
-            lambda p, t, c: model_lib.decode_step(p, t, c, arch, mesh),
-        )
+        self.w_bits = arch.serve_w_bits if quantize else 16
+        self.engine = None
+        if ServeEngine.supports(arch):
+            pages_per_slot = -(-max_len // page_size)
+            self.engine = ServeEngine(
+                arch,
+                params,
+                max_slots=batch_size,
+                num_pages=batch_size * pages_per_slot,
+                page_size=page_size,
+                mesh=mesh,
+            )
+        else:  # recurrent-cache archs: static-wave fallback
+            from repro.models import transformer as model_lib
+
+            self._params = (
+                model_lib.quantize_params(params, arch.serve_w_bits)
+                if quantize
+                else params
+            )
+            import jax
+
+            self._prefill = jax.jit(
+                lambda p, b: model_lib.prefill(p, b, arch, max_len, mesh)
+            )
+            self._decode = jax.jit(
+                lambda p, t, c: model_lib.decode_step(p, t, c, arch, mesh)
+            )
         self.stats = ServeStats()
 
+    @property
+    def params(self):
+        """Weights actually served (quantized view when enabled)."""
+        if self.engine is not None:
+            return self.engine.params_for(self.w_bits)
+        return self._params
+
+    def serve(self, requests: list[Request], greedy: bool = True) -> list[Request]:
+        if not greedy:
+            raise NotImplementedError("engine decoding is greedy-only")
+        if self.engine is None:
+            return self._serve_waves(requests)
+        handles = [
+            self.engine.submit(
+                r.prompt, r.max_new_tokens, w_bits=self.w_bits, rid=r.rid
+            )
+            for r in requests
+        ]
+        self.engine.run()
+        for req, h in zip(requests, handles):
+            req.out_tokens = list(h.out_tokens)
+            req.done = h.done
+        es = self.engine.stats
+        self.stats = ServeStats(
+            prefill_s=es.prefill_s,
+            decode_s=es.decode_s,
+            decode_steps=es.decode_steps,
+            tokens_out=es.tokens_out,
+        )
+        return requests
+
+    # ------------------------------------------------- static-wave fallback
     def _make_batch(self, reqs: list[Request]) -> dict:
+        import jax.numpy as jnp
+
         s = max(len(r.prompt) for r in reqs)
         toks = np.zeros((len(reqs), s), np.int32)
         for i, r in enumerate(reqs):
@@ -76,25 +140,28 @@ class Server:
             batch["prefix_emb"] = prefix_embeddings(self.arch, len(reqs))
         return batch
 
-    def serve(self, requests: list[Request], greedy: bool = True) -> list[Request]:
-        """Static-batch scheduler: processes requests in waves of batch_size."""
+    def _serve_waves(self, requests: list[Request]) -> list[Request]:
+        """The pre-engine scheduler: waves of batch_size, shared positions."""
+        import jax
+        import jax.numpy as jnp
+
         pending = list(requests)
         while pending:
             wave = pending[: self.batch_size]
             pending = pending[self.batch_size:]
             t0 = time.perf_counter()
             batch = self._make_batch(wave)
-            logits, cache = self._prefill(self.params, batch)
+            logits, cache = self._prefill(self._params, batch)
             jax.block_until_ready(logits)
             self.stats.prefill_s += time.perf_counter() - t0
             max_new = max(r.max_new_tokens for r in wave)
             t0 = time.perf_counter()
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            for step in range(max_new):
+            for _ in range(max_new):
                 for i, r in enumerate(wave):
                     if len(r.out_tokens) < r.max_new_tokens:
                         r.out_tokens.append(int(tok[i, 0]))
-                logits, cache = self._decode(self.params, tok, cache)
+                logits, cache = self._decode(self._params, tok, cache)
                 tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
                 self.stats.decode_steps += 1
             jax.block_until_ready(logits)

@@ -1,5 +1,7 @@
 """Custom-instruction encodings: round-trip, field packing, decode rejection."""
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

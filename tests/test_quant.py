@@ -1,6 +1,9 @@
 """Quantization substrate: packing round-trips, error bounds, QTensor."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from hypothesis.extra import numpy as hnp

@@ -3,6 +3,8 @@ sixteen 4-bit multipliers == 1x16b / 4x8b / 16x4b MACs, bit-exactly."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
