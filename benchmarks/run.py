@@ -5,11 +5,52 @@ Prints ``name,value,paper_value,rel_err`` CSV per reproduction row and
 ``name,us_per_call,derived`` for the microbenchmarks.  Roofline tables come
 from the dry-run artifacts (python -m repro.launch.roofline), not this box's
 CPU walltime.
+
+``--smoke`` runs only the kernel microbenchmarks at small shapes (plus one
+tiny serving row) — a CI guard that the perf plumbing keeps importing,
+compiling and producing sane numbers; the paper tables and full sweeps stay
+out of the hot CI path.
 """
 from __future__ import annotations
 
+import argparse
+
+
+def smoke() -> None:
+    from benchmarks import kernel_bench, serve_bench
+
+    print("# === Kernel microbench (smoke shapes) ===")
+    print("name,us_per_call,derived")
+    rows = kernel_bench.rows(smoke=True)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.2f}")
+    # hard exits, not asserts: the guard must survive python -O
+    import math
+
+    if not all(math.isfinite(us) and math.isfinite(d) for _, us, d in rows):
+        raise SystemExit("smoke: non-finite benchmark value")
+    if not any(n.startswith("decode_paged") for n, _, _ in rows):
+        raise SystemExit("smoke: paged decode rows missing from kernel_bench")
+
+    print("\n# === Serving engine (smoke) ===")
+    print("name,decode_tok_per_s,mean_batch_occupancy")
+    tok_s, occ = serve_bench._run_one(2, [8])
+    print(f"serve_w8_b2,{tok_s:.1f},{occ:.2f}")
+    if not tok_s > 0:
+        raise SystemExit("smoke: serving throughput not positive")
+
 
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--smoke", action="store_true",
+        help="small-shape kernel + serving smoke run (CI guard)",
+    )
+    args = parser.parse_args()
+    if args.smoke:
+        smoke()
+        return
+
     from benchmarks import fig3, fig4, kernel_bench, serve_bench, table1
 
     print("# === Table I (SPEED vs Ara synthesized/peak) ===")

@@ -113,7 +113,18 @@ def mqa_decode_pallas(
 ) -> jnp.ndarray:
     b, hkv, g, d = q.shape
     s = k_data.shape[1]
-    assert s % bs == 0, (s, bs)
+    bs = min(bs, s)
+    if s % bs:
+        # pad-and-mask: callers with non-multiple cache widths (e.g. small
+        # page-table widths) get a zero tail that the per-row length mask
+        # already excludes — lengths <= s by contract.
+        pad = (-s) % bs
+        pads = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_data = jnp.pad(k_data, pads)
+        v_data = jnp.pad(v_data, pads)
+        k_scale = jnp.pad(k_scale, pads)
+        v_scale = jnp.pad(v_scale, pads)
+        s += pad
     n_s = s // bs
     dk = k_data.shape[-1]
     kernel = functools.partial(

@@ -9,7 +9,7 @@ compiled on TPU; an XLA-native fallback is available for A/B tests).
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +20,7 @@ from repro.core.isa import Dataflow
 from repro.core.precision import Precision
 from repro.kernels import mpmm as mpmm_mod
 from repro.kernels import mqa_decode as dec_mod
+from repro.kernels import paged_decode as paged_mod
 from repro.kernels import ref as ref_mod
 from repro.quant.pack import pack_int4
 
@@ -30,6 +31,7 @@ __all__ = [
     "mpconv",
     "quantize_kv",
     "mqa_decode",
+    "paged_mqa_decode",
 ]
 
 _INT_DTYPE = {4: jnp.int8, 8: jnp.int8, 16: jnp.int16}
@@ -243,14 +245,8 @@ def mqa_decode(
     if interpret is None:
         interpret = _interpret_default()
     b, h, d = q.shape
-    s, hkv = k_data.shape[1], k_data.shape[2]
-    bs = min(bs, s)
-    if s % bs:
-        pad = (-s) % bs
-        k_data = jnp.pad(k_data, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v_data = jnp.pad(v_data, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    hkv = k_data.shape[2]
+    # non-multiple widths clamp + pad-and-mask inside the kernel
     qg = q.reshape(b, hkv, h // hkv, d)
     out = dec_mod.mqa_decode_pallas(
         qg,
@@ -264,4 +260,70 @@ def mqa_decode(
         bs=bs,
         interpret=interpret,
     )
+    return out.reshape(b, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_bits", "backend", "interpret"))
+def paged_mqa_decode(
+    q: jnp.ndarray,  # [B, H, D]
+    k_pool: jnp.ndarray,  # [L, P, ps, Hkv, D (/2 if kv_bits==4)]
+    v_pool: jnp.ndarray,
+    k_scale,  # [L, P, ps, Hkv, 1] f32, or None when kv_bits == 16
+    v_scale,
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    lengths: jnp.ndarray,  # [B] int32 — tokens already in the cache
+    layer,  # int32 — pool layer to attend against
+    new_k: jnp.ndarray,  # [B, Hkv, D (/2)] this step's token, not yet stored
+    new_v: jnp.ndarray,
+    new_k_scale=None,  # [B, Hkv, 1] f32, or None
+    new_v_scale=None,
+    *,
+    kv_bits: int = 8,
+    window=None,  # int or traced scalar (per-layer windows come from scan)
+    backend: Optional[Literal["pallas", "xla"]] = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Single-token GQA attention straight against the paged KV pool.
+
+    Reads only the pages each row's table points at (up to its length), and
+    folds the step's own not-yet-stored token into the online softmax, so no
+    contiguous cache view ever materializes.  ``backend=None`` picks the
+    Pallas kernel on TPU and the slot-scan XLA fallback elsewhere (compiled
+    Pallas-on-CPU isn't a thing; interpret mode is for correctness tests).
+    Only ``window``'s *presence* is static — its value may be traced.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if backend is None:
+        backend = "xla" if jax.default_backend() != "tpu" else "pallas"
+    b, h, d = q.shape
+    hkv = k_pool.shape[3]
+    qg = q.reshape(b, hkv, h // hkv, d)
+    sm_scale = 1.0 / float(np.sqrt(d))
+    args = (
+        qg,
+        k_pool,
+        v_pool,
+        k_scale,
+        v_scale,
+        tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        jnp.asarray(layer, jnp.int32),
+        new_k,
+        new_v,
+        new_k_scale,
+        new_v_scale,
+    )
+    if backend == "xla":
+        out = paged_mod.paged_mqa_decode_xla(
+            *args, kv_bits=kv_bits, sm_scale=sm_scale, window=window
+        )
+    else:
+        out = paged_mod.paged_mqa_decode_pallas(
+            *args,
+            kv_bits=kv_bits,
+            sm_scale=sm_scale,
+            window=window,
+            interpret=interpret,
+        )
     return out.reshape(b, h, d)

@@ -1,0 +1,355 @@
+"""Paged flash-decode GQA attention: index the KV page pool in place.
+
+The serving engine stores every request's KV cache as fixed-size pages in one
+shared pool (``serve/kv_cache.py``); a request's *page table* lists its pages
+in order.  The old decode path gathered the pool into a contiguous
+``[L, B, S, Hkv, D]`` view every token — an O(layers x batch x max_seq) HBM
+copy that dwarfed the attention math.  This kernel reads the pool through the
+page table instead, PagedAttention-style:
+
+* grid ``(batch, kv_head, page_slot)`` with the slot dimension innermost and
+  sequential; the block-spec index map translates ``(row, slot) -> page_id``
+  via a scalar-prefetched table, so each grid step DMAs exactly one page.
+* slots at or beyond a row's occupied length are *clamped* to the row's last
+  live page: consecutive grid steps then ask for the same block and Pallas
+  elides the re-fetch — dead slots cost neither DMA nor (via ``pl.when``)
+  compute.  Per-token attention traffic is proportional to the row's actual
+  cache length, not the table capacity.
+* int8/int4 payloads are dequantized in-register with per-(token, head)
+  scales, exactly like ``kernels/mqa_decode.py``; bf16 pools skip the scales.
+* the *new* token's K/V (computed this step, not yet in the pool) enters the
+  online softmax as one extra term in the final grid step, so the caller
+  never round-trips it through a gathered view — it scatters the quantized
+  payload straight into its page afterwards (``pool.at[:, page, off].set``).
+
+``paged_mqa_decode_xla`` is the XLA fallback for CPU/interpret runs: a
+``lax.scan`` over page slots that gathers one page per live slot through the
+table (``lax.cond`` skips slots beyond the longest row), with the same online
+softmax and fused new-token term.  Oracle: ``kernels/ref.py::
+paged_mqa_decode_ref``;  dispatch: ``kernels/ops.py::paged_mqa_decode``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.mqa_decode import _unpack_kv4
+from repro.quant.pack import unpack_int4
+
+__all__ = ["paged_mqa_decode_pallas", "paged_mqa_decode_xla"]
+
+# jax < 0.5 names it TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+_NEG_INF = -1e30
+
+
+def _paged_kernel(
+    # scalar prefetch
+    tables_ref,  # [B, W] int32
+    lengths_ref,  # [B] int32
+    win_lo_ref,  # [B] int32 — first in-window position (0 when no window)
+    layer_ref,  # [1] int32
+    # blocks
+    q_ref,  # [1, 1, G, D]
+    k_ref,  # [1, 1, ps, 1, Dk]   (one page of one kv head)
+    v_ref,
+    *rest,  # [ks_ref, vs_ref,] nk_ref, nv_ref, [nks_ref, nvs_ref,] o_ref + scratch
+    ps: int,
+    kv_bits: int,
+    sm_scale: float,
+    n_w: int,
+    has_window: bool,
+):
+    quant = kv_bits < 16
+    if quant:
+        ks_ref, vs_ref, nk_ref, nv_ref, nks_ref, nvs_ref = rest[:6]
+        o_ref, m_ref, l_ref, acc_ref = rest[6:]
+    else:
+        nk_ref, nv_ref = rest[:2]
+        o_ref, m_ref, l_ref, acc_ref = rest[2:]
+
+    b_idx = pl.program_id(0)
+    w_idx = pl.program_id(2)
+    length = lengths_ref[b_idx]  # cache tokens; new token sits at `length`
+
+    @pl.when(w_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, D]
+
+    # window lower bound over the total (cache + new token) length
+    lo = win_lo_ref[b_idx]
+    block_live = w_idx * ps < length
+    if has_window:
+        block_live = block_live & ((w_idx + 1) * ps > lo)
+
+    @pl.when(block_live)
+    def _update():
+        k = k_ref[0, 0, :, 0]  # [ps, Dk]
+        v = v_ref[0, 0, :, 0]
+        if kv_bits == 4:
+            k = _unpack_kv4(k)
+            v = _unpack_kv4(v)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        if quant:
+            kf = kf * ks_ref[0, 0, :, 0].astype(jnp.float32)
+            vf = vf * vs_ref[0, 0, :, 0].astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            q, kf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, ps]
+        scores = scores * sm_scale
+        pos = w_idx * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        valid = pos < length
+        if has_window:
+            valid = valid & (pos >= lo)
+        scores = jnp.where(valid, scores, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        p = jnp.where(valid, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vf, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(w_idx == n_w - 1)
+    def _finish():
+        # fused new-token term: the token produced this step attends to itself
+        # (always inside any window — distance 0) without touching the pool.
+        nk = nk_ref[0]  # [1, Dk]
+        nv = nv_ref[0]
+        if kv_bits == 4:
+            nk = _unpack_kv4(nk)
+            nv = _unpack_kv4(nv)
+        nkf = nk.astype(jnp.float32)
+        nvf = nv.astype(jnp.float32)
+        if quant:
+            nkf = nkf * nks_ref[0, 0, 0].astype(jnp.float32)
+            nvf = nvf * nvs_ref[0, 0, 0].astype(jnp.float32)
+        s_new = jax.lax.dot_general(
+            q, nkf, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, 1]
+        s_new = s_new * sm_scale
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s_new)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s_new - m_new)  # [G, 1]
+        denom = l_ref[...] * alpha + p
+        acc = acc_ref[...] * alpha + p * nvf
+        o_ref[0, 0] = (acc / jnp.maximum(denom, 1e-20)).astype(o_ref.dtype)
+
+
+def paged_mqa_decode_pallas(
+    q: jnp.ndarray,  # [B, Hkv, G, D]
+    k_pool: jnp.ndarray,  # [L, P, ps, Hkv, Dk]  int8 payload or bf16
+    v_pool: jnp.ndarray,
+    k_scale,  # [L, P, ps, Hkv, 1] f32, or None when kv_bits == 16
+    v_scale,
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    lengths: jnp.ndarray,  # [B] int32 — tokens already in the cache
+    layer: jnp.ndarray,  # [] or [1] int32 — which pool layer to read
+    new_k: jnp.ndarray,  # [B, Hkv, Dk] — this step's K/V, not yet in the pool
+    new_v: jnp.ndarray,
+    new_k_scale,  # [B, Hkv, 1] f32, or None
+    new_v_scale,
+    *,
+    kv_bits: int,
+    sm_scale: float,
+    window: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hkv, g, d = q.shape
+    n_pages, ps = k_pool.shape[1], k_pool.shape[2]
+    dk = k_pool.shape[-1]
+    n_w = tables.shape[1]
+    quant = kv_bits < 16
+    lengths = lengths.astype(jnp.int32)
+    # per-row first in-window position over the total (cache + new) length;
+    # window may be a traced scalar (per-layer windows come out of lax.scan)
+    if window is not None:
+        win_lo = jnp.maximum(lengths + 1 - jnp.asarray(window, jnp.int32), 0)
+    else:
+        win_lo = jnp.zeros_like(lengths)
+
+    def page_map(b_, h_, w_, tables_ref, lengths_ref, win_lo_ref, layer_ref):
+        # Clamp dead slots to the row's nearest live page — below the window
+        # start as well as past the length: consecutive grid steps then index
+        # the same block and Pallas skips the re-fetch, so windowed layers
+        # DMA ~window/ps pages per token, not the whole cache.
+        n_live = (lengths_ref[b_] + ps - 1) // ps
+        first = win_lo_ref[b_] // ps  # 0 when no window
+        slot = jnp.clip(jnp.maximum(w_, first), 0, jnp.maximum(n_live - 1, 0))
+        return (layer_ref[0], tables_ref[b_, slot], 0, h_, 0)
+
+    def head_map(b_, h_, w_, *_):
+        return (b_, h_, 0, 0)
+
+    def tok_map(b_, h_, w_, *_):
+        return (b_, h_, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), head_map),
+        pl.BlockSpec((1, 1, ps, 1, dk), page_map),
+        pl.BlockSpec((1, 1, ps, 1, dk), page_map),
+    ]
+    inputs = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1, ps, 1, 1), page_map),
+            pl.BlockSpec((1, 1, ps, 1, 1), page_map),
+        ]
+        inputs += [k_scale, v_scale]
+    in_specs += [
+        pl.BlockSpec((1, 1, dk), tok_map),
+        pl.BlockSpec((1, 1, dk), tok_map),
+    ]
+    inputs += [new_k, new_v]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, 1, 1), tok_map),
+            pl.BlockSpec((1, 1, 1), tok_map),
+        ]
+        inputs += [new_k_scale, new_v_scale]
+
+    kernel = functools.partial(
+        _paged_kernel,
+        ps=ps,
+        kv_bits=kv_bits,
+        sm_scale=sm_scale,
+        n_w=n_w,
+        has_window=window is not None,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, hkv, n_w),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d), head_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+        name=f"paged_mqa_decode_kv{kv_bits}",
+    )(
+        tables.astype(jnp.int32),
+        lengths,
+        win_lo,
+        jnp.asarray(layer, jnp.int32).reshape(1),
+        *inputs,
+    )
+
+
+def paged_mqa_decode_xla(
+    q: jnp.ndarray,  # [B, Hkv, G, D]
+    k_pool: jnp.ndarray,  # [L, P, ps, Hkv, Dk]
+    v_pool: jnp.ndarray,
+    k_scale,
+    v_scale,
+    tables: jnp.ndarray,  # [B, W] int32
+    lengths: jnp.ndarray,  # [B] int32
+    layer,  # scalar int32
+    new_k: jnp.ndarray,  # [B, Hkv, Dk]
+    new_v: jnp.ndarray,
+    new_k_scale,
+    new_v_scale,
+    *,
+    kv_bits: int,
+    sm_scale: float,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """XLA fallback: lax.scan over page slots, one [B]-page gather per live
+    slot through the table.  ``lax.cond`` skips slots past the longest row,
+    so CPU walltime scales with occupied length, not table capacity (the
+    kernel's per-row clamping, batch-coarsened)."""
+    b, hkv, g, d = q.shape
+    n_layers, n_pages, ps = k_pool.shape[:3]
+    n_w = tables.shape[1]
+    quant = kv_bits < 16
+    layer = jnp.asarray(layer, jnp.int32).reshape(())
+
+    # fold the layer index into the page axis so per-slot gathers never
+    # materialize a whole layer's pool slice
+    kp = k_pool.reshape(n_layers * n_pages, ps, hkv, -1)
+    vp = v_pool.reshape(n_layers * n_pages, ps, hkv, -1)
+    if quant:
+        ksp = k_scale.reshape(n_layers * n_pages, ps, hkv, 1)
+        vsp = v_scale.reshape(n_layers * n_pages, ps, hkv, 1)
+    base = layer * n_pages
+    lengths = lengths.astype(jnp.int32)
+    qf = q.astype(jnp.float32)
+    lo = lengths + 1 - window if window is not None else None
+
+    def dequant(page, scale):  # [B, ps, Hkv, Dk] -> [B, ps, Hkv, D] f32
+        if kv_bits == 4:
+            page = unpack_int4(page, axis=-1)
+        page = page.astype(jnp.float32)
+        if scale is not None:
+            page = page * scale.astype(jnp.float32)
+        return page
+
+    def slot_step(carry, w):
+        def update(carry):
+            m, l, acc = carry
+            pages = base + tables[:, w]  # [B]
+            kf = dequant(kp[pages], ksp[pages] if quant else None)
+            vf = dequant(vp[pages], vsp[pages] if quant else None)
+            scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) * sm_scale
+            pos = w * ps + jnp.arange(ps, dtype=jnp.int32)[None, :]  # [1, ps]
+            valid = pos < lengths[:, None]
+            if window is not None:
+                valid = valid & (pos >= lo[:, None])
+            vmask = valid[:, None, None, :]
+            scores = jnp.where(vmask, scores, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(scores, axis=-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.where(vmask, jnp.exp(scores - m_new), 0.0)
+            l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum("bhgs,bshd->bhgd", p, vf)
+            return m_new, l_new, acc_new
+
+        # a slot is live if ANY row has cached tokens in it that fall inside
+        # its window — per-row, so short or pow2-padding rows (lengths == 0)
+        # can't pin the whole batch's scan open
+        alive = w * ps < lengths
+        if window is not None:
+            alive = alive & ((w + 1) * ps > jnp.maximum(lo, 0))
+        carry = jax.lax.cond(jnp.any(alive), update, lambda c: c, carry)
+        return carry, None
+
+    m0 = jnp.full((b, hkv, g, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        slot_step, (m0, l0, a0), jnp.arange(n_w, dtype=jnp.int32)
+    )
+
+    # fused new-token term (always valid, never read from the pool)
+    nkf = dequant(new_k[:, None], new_k_scale[:, None] if quant else None)
+    nvf = dequant(new_v[:, None], new_v_scale[:, None] if quant else None)
+    s_new = jnp.einsum("bhgd,bshd->bhgs", qf, nkf) * sm_scale  # [B,Hkv,G,1]
+    m_new = jnp.maximum(m, s_new)
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s_new - m_new)
+    denom = l * alpha + p
+    acc = acc * alpha + jnp.einsum("bhgs,bshd->bhgd", p, nvf)
+    return (acc / jnp.maximum(denom, 1e-20)).astype(q.dtype)

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["mpmm_ref", "mpconv_ref", "mqa_decode_ref"]
+__all__ = ["mpmm_ref", "mpconv_ref", "mqa_decode_ref", "paged_mqa_decode_ref"]
 
 
 def _unpack_w4_k(packed: jnp.ndarray) -> jnp.ndarray:
@@ -106,6 +106,79 @@ def mqa_decode_ref(
     vf = v_data.astype(jnp.float32) * v_scale.astype(jnp.float32)
     scores = jnp.einsum("bkgd,bskd->bkgs", qf, kf) * sm_scale
     mask = jnp.arange(s)[None, :] < lengths[:, None]  # [B, S]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_mqa_decode_ref(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    k_scale,
+    v_scale,
+    tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    layer,
+    new_k: jnp.ndarray,
+    new_v: jnp.ndarray,
+    new_k_scale=None,
+    new_v_scale=None,
+    *,
+    sm_scale: float,
+    window=None,
+) -> jnp.ndarray:
+    """Oracle for kernels/paged_decode.py — single-token GQA attention over a
+    *paged* quantized KV pool, plus the step's own (not-yet-stored) token.
+
+    q:        [B, H, D]
+    k_pool:   [L, P, ps, Hkv, D]  int8 payload (pre-unpacked for kv4) or float
+    k_scale:  [L, P, ps, Hkv, 1]  f32, or None for 16-bit pools
+    tables:   [B, W] int32 — page ids, zero-padded past each row's table
+    lengths:  [B] int32 — tokens already in the cache; the new token attends
+              at position lengths[b], so the softmax spans lengths[b] + 1
+              positions (never empty, even at lengths == 0)
+    layer:    which pool layer to read
+    new_k:    [B, Hkv, D] payload of this step's token (same dtype as pool)
+    returns:  [B, H, D] in q.dtype
+
+    Semantics are gather-based on purpose: pages are collected into the
+    contiguous [B, W*ps, ...] view, the new token is inserted at its own
+    position, and plain masked softmax runs over it — the exact computation
+    the old serve path performed, kept as the bit-reference for the kernel.
+    """
+    b, h, d = q.shape
+    ps, hkv = k_pool.shape[2], k_pool.shape[3]
+    w = tables.shape[1]
+    s = w * ps
+    rows = jnp.arange(b)
+    lengths = lengths.astype(jnp.int32)
+
+    def gather(pool, scale, new, new_scale):
+        g = pool[layer][tables]  # [B, W, ps, Hkv, *]
+        g = g.reshape(b, s, *g.shape[3:]).astype(jnp.float32)
+        if scale is not None:
+            sc = scale[layer][tables].reshape(b, s, hkv, 1).astype(jnp.float32)
+            g = g * sc
+        nf = new.astype(jnp.float32)
+        if new_scale is not None:
+            nf = nf * new_scale.astype(jnp.float32)
+        # one spare position so a full table (lengths == W*ps) still has
+        # room for this step's token
+        g = jnp.pad(g, ((0, 0), (0, 1)) + ((0, 0),) * (g.ndim - 2))
+        return g.at[rows, lengths].set(nf)
+
+    kf = gather(k_pool, k_scale, new_k, new_k_scale)
+    vf = gather(v_pool, v_scale, new_v, new_v_scale)
+    s = s + 1
+    total = lengths + 1  # cache + this step's token
+    qf = q.astype(jnp.float32).reshape(b, hkv, h // hkv, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, kf) * sm_scale
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+    mask = pos < total[:, None]
+    if window is not None:
+        mask = mask & (pos >= total[:, None] - window)
     scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, vf)

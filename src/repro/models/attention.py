@@ -138,3 +138,52 @@ def decode_attention(
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,  # [B, 1, H, D]
+    k_pool: jnp.ndarray,  # [L, P, ps, Hkv, D]  (int8 payload or bf16)
+    v_pool: jnp.ndarray,
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    lengths: jnp.ndarray,  # [B] int32 — tokens already in the cache
+    layer,  # int32 — which pool layer this block attends against
+    new_k: jnp.ndarray,  # [B, Hkv, D] this step's K/V (not yet in the pool)
+    new_v: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # [L, P, ps, Hkv, 1] when quantized
+    v_scale: Optional[jnp.ndarray] = None,
+    new_k_scale: Optional[jnp.ndarray] = None,  # [B, Hkv, 1]
+    new_v_scale: Optional[jnp.ndarray] = None,
+    kv_bits: int = 16,
+) -> jnp.ndarray:
+    """One-token attention straight against the paged KV pool.
+
+    The paged contract of :func:`decode_attention`: instead of a gathered
+    contiguous [B, S, Hkv, D] cache view, the kernel walks each row's page
+    table and reads only the pages holding its ``lengths[b]`` cached tokens;
+    the token being decoded enters the online softmax as an extra term
+    (every token attends to itself) so the softmax spans ``lengths + 1``
+    positions.  Dispatches to the Pallas kernel on TPU and its slot-scan XLA
+    fallback elsewhere (kernels/ops.py::paged_mqa_decode).
+    """
+    from repro.kernels import ops
+
+    b, _, h, d = q.shape
+    out = ops.paged_mqa_decode(
+        q.reshape(b, h, d),
+        k_pool,
+        v_pool,
+        k_scale,
+        v_scale,
+        tables,
+        lengths,
+        layer,
+        new_k,
+        new_v,
+        new_k_scale,
+        new_v_scale,
+        kv_bits=kv_bits,
+        window=window,
+    )
+    return out.reshape(b, 1, h, d)

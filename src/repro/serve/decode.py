@@ -1,18 +1,25 @@
-"""Jit'd ragged batched decode step over a paged KV cache.
+"""Jit'd ragged batched decode step straight over the paged KV pool.
 
-One call decodes one token for every request in a same-precision group.  The
-group's page tables are gathered into a contiguous [L, B, S, Hkv, D] view
-(S = table_width * page_size), the new token's K/V is inserted at each
-request's own position, and attention runs through
-``models.attention.decode_attention`` — the same per-row-length contract the
-Pallas ``mqa_decode`` kernel implements on real TPUs.  All weight matmuls go
-through ``models.layers.dense``, which dispatches quantized weights to the
-``mpmm`` multi-precision kernel path, so a W4A16 group and a W8A16 group
-each cost one batched kernel call per projection per layer.
+One call decodes one token for every request in a same-precision group.
+Attention never materializes a contiguous cache view: each layer calls
+``models.attention.paged_decode_attention``, which walks the group's page
+tables inside the kernel (Pallas on TPU, slot-scan XLA fallback elsewhere)
+and reads only the pages holding each row's ``lengths[b]`` cached tokens.
+The token being decoded enters the online softmax as a fused extra term, and
+after the layer scan its quantized K/V is scattered *directly* into its page
+(``pool.at[:, page, off].set``) — the old gather → insert → re-scatter
+round-trip through a ``[L, B, S, Hkv, D]`` view is gone, so per-token
+attention traffic is proportional to actual cache lengths, not
+``L x B x table_capacity``.
 
-Unlike ``models.transformer.decode_step`` (one shared scalar position), every
-row carries its own cache length — requests that joined the batch at
-different times decode together.
+All weight matmuls go through ``models.layers.dense``, which dispatches
+quantized weights to the ``mpmm`` multi-precision kernel path, so a W4A16
+group and a W8A16 group each cost one batched kernel call per projection per
+layer.  Unlike ``models.transformer.decode_step`` (one shared scalar
+position), every row carries its own cache length — requests that joined the
+batch at different times decode together.  Rows with ``valid[b] == False``
+are pow2-bucket padding: they compute garbage logits (sliced off by the
+engine) and their append is dropped via an out-of-range page id.
 """
 from __future__ import annotations
 
@@ -26,7 +33,11 @@ from repro.models.layers import apply_rope, dense, rms_norm
 
 
 def _gather_pages(pool: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
-    """[L, P, ps, ...] pool + [B, W] page tables -> [L, B, W*ps, ...]."""
+    """[L, P, ps, ...] pool + [B, W] page tables -> [L, B, W*ps, ...].
+
+    No longer on the per-token decode path (the paged kernel indexes the pool
+    in place); kept as the gather reference for tests and debugging.
+    """
     g = pool[:, tables]  # [L, B, W, ps, ...]
     l, b, w, ps = g.shape[:4]
     return g.reshape(l, b, w * ps, *g.shape[4:])
@@ -37,6 +48,7 @@ def paged_decode_step(
     tokens: jnp.ndarray,  # [B, 1] int32 — last generated token per request
     lengths: jnp.ndarray,  # [B] int32 — tokens already in cache (new token's position)
     tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    valid: jnp.ndarray,  # [B] bool — False for pow2-bucket padding rows
     pool_k: jnp.ndarray,  # [L, P, ps, Hkv, D]
     pool_v: jnp.ndarray,
     pool_ks,  # [L, P, ps, Hkv, 1] f32 or None (kv_bits == 16)
@@ -45,30 +57,35 @@ def paged_decode_step(
     cfg: ArchConfig,
     mesh=None,
 ):
-    """Returns (logits [B, V], new_kv) where new_kv is the new token's
-    per-layer K/V (k, v[, k_scale, v_scale]) with k/v [L, B, Hkv, D] — the
-    caller scatters it into the page pool.
+    """Returns (logits [B, V], new_pools) where new_pools is the page pool
+    with every valid row's new token already scattered into its page —
+    (k, v, k_scale, v_scale), scales None when kv_bits == 16.  The caller
+    adopts the returned pools (donation makes the scatter in-place).
+
+    Append precondition: every row with valid[b] == True must have a table
+    slot allocated for position lengths[b] (lengths[b] < table_len * ps —
+    the engine guarantees this via _ensure_page_room).  Zero-padded table
+    entries are indistinguishable from a real page 0, so a row whose *own*
+    table is exhausted inside a wider padded table would scatter into page 0;
+    set valid[b] = False for any row that must not append.  Appends at or
+    past the padded width W are dropped automatically.
 
     Not jit'd here: the engine jits a closure over its mesh (mesh objects
     aren't hashable jit statics), mirroring how it wraps prefill."""
     quant = cfg.serve_kv_bits < 16
     b = tokens.shape[0]
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    n_layers = pool_k.shape[0]
+    num_pages, page_size = pool_k.shape[1], pool_k.shape[2]
     x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]  # [B, 1, D]
     posv = lengths[:, None]  # [B, 1] per-row positions
     rows = jnp.arange(b)
-
-    ck_all = _gather_pages(pool_k, tables)
-    cv_all = _gather_pages(pool_v, tables)
-    if quant:
-        cks_all = _gather_pages(pool_ks, tables)
-        cvs_all = _gather_pages(pool_vs, tables)
 
     windows = model_lib._per_layer_window(cfg, cfg.n_layers)
 
     def layer(carry, xs):
         x = carry
-        p = xs["p"]
+        p, li = xs["p"], xs["li"]
         win = xs["win"] if windows is not None else (cfg.window if cfg.window else None)
         xn = rms_norm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)
         q = dense(xn, p["wq"]).reshape(b, 1, h, hd)
@@ -79,19 +96,21 @@ def paged_decode_step(
         if quant:
             kq, ksc = model_lib._quantize_token_kv(k, cfg.serve_kv_bits)
             vq, vsc = model_lib._quantize_token_kv(v, cfg.serve_kv_bits)
-            ck = xs["k"].at[rows, lengths].set(kq[:, 0])
-            cv = xs["v"].at[rows, lengths].set(vq[:, 0])
-            cks = xs["ks"].at[rows, lengths].set(ksc[:, 0])
-            cvs = xs["vs"].at[rows, lengths].set(vsc[:, 0])
-            o = attn_mod.decode_attention(
-                q, ck, cv, lengths + 1, window=win, k_scale=cks, v_scale=cvs
+            o = attn_mod.paged_decode_attention(
+                q, pool_k, pool_v, tables, lengths, li, kq[:, 0], vq[:, 0],
+                window=win, k_scale=pool_ks, v_scale=pool_vs,
+                new_k_scale=ksc[:, 0], new_v_scale=vsc[:, 0],
+                kv_bits=cfg.serve_kv_bits,
             )
             new_kv = (kq[:, 0], vq[:, 0], ksc[:, 0], vsc[:, 0])
         else:
-            ck = xs["k"].at[rows, lengths].set(k[:, 0].astype(xs["k"].dtype))
-            cv = xs["v"].at[rows, lengths].set(v[:, 0].astype(xs["v"].dtype))
-            o = attn_mod.decode_attention(q, ck, cv, lengths + 1, window=win)
-            new_kv = (k[:, 0], v[:, 0])
+            kc = k[:, 0].astype(pool_k.dtype)
+            vc = v[:, 0].astype(pool_v.dtype)
+            o = attn_mod.paged_decode_attention(
+                q, pool_k, pool_v, tables, lengths, li, kc, vc,
+                window=win, kv_bits=cfg.serve_kv_bits,
+            )
+            new_kv = (kc, vc)
         x = x + dense(o.reshape(b, 1, h * hd), p["wo"])
         if cfg.family == "moe":
             m, _ = model_lib._moe_block(p, x, cfg, mesh)
@@ -100,15 +119,39 @@ def paged_decode_step(
             x = x + model_lib._mlp_block(p, x, cfg)
         return x, new_kv
 
-    xs = {"p": params["blocks"], "k": ck_all, "v": cv_all}
-    if quant:
-        xs["ks"] = cks_all
-        xs["vs"] = cvs_all
+    xs = {"p": params["blocks"], "li": jnp.arange(n_layers, dtype=jnp.int32)}
     if windows is not None:
         xs["win"] = windows
     x, new_kv = jax.lax.scan(layer, x, xs)
 
+    # Fused token append: scatter each row's new K/V straight into its page.
+    # Padding rows get an out-of-range page id, which jax scatters drop; a
+    # slot index at/past the padded width W must fill out-of-range too, not
+    # clamp to the last entry and overwrite it.  (A row whose own shorter
+    # table is exhausted *inside* W is the caller's job to mask via `valid`
+    # — see the append precondition in the docstring.)
+    page_ids = tables.at[rows, lengths // page_size].get(
+        mode="fill", fill_value=num_pages
+    )
+    page_ids = jnp.where(valid, page_ids, num_pages)
+    offs = lengths % page_size
+
+    def scatter(pool, new):
+        return pool.at[:, page_ids, offs].set(new.astype(pool.dtype), mode="drop")
+
+    if quant:
+        new_k, new_v, new_ks, new_vs = new_kv
+        pools = (
+            scatter(pool_k, new_k),
+            scatter(pool_v, new_v),
+            scatter(pool_ks, new_ks),
+            scatter(pool_vs, new_vs),
+        )
+    else:
+        new_k, new_v = new_kv
+        pools = (scatter(pool_k, new_k), scatter(pool_v, new_v), None, None)
+
     x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
     logits = dense(x[:, -1], params["unembed"]).astype(jnp.float32)
     logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30)
-    return logits, new_kv
+    return logits, pools

@@ -16,9 +16,12 @@ One engine step:
      decoding makes the replay deterministic).
   4. **Decode** — running requests are grouped by (w_bits, kv_bits); each
      group makes ONE ``paged_decode_step`` call (batched mpmm projections +
-     ragged-length cache attention), then its new K/V token is scattered
-     back into the pool.  A step that decodes ≥2 different precision groups
-     is counted in ``stats.mixed_precision_steps``.
+     paged-kernel attention reading the page pool in place), which also
+     scatters the new K/V token straight into its page — the engine just
+     adopts the returned pools.  Batch and table-width dimensions are
+     pow2-bucketed so admitting/retiring one request doesn't retrace.  A
+     step that decodes ≥2 different precision groups is counted in
+     ``stats.mixed_precision_steps``.
 
 Requests never wait for batch-mates: a request admitted at step N starts
 decoding at step N alongside requests admitted long before.
@@ -107,9 +110,15 @@ class ServeEngine:
         self._prefill_fn = functools.partial(
             jax.jit, static_argnames=("cfg", "max_len")
         )(lambda p, b, cfg, max_len: model_lib.prefill(p, b, cfg, max_len, mesh))
-        self._decode_fn = functools.partial(jax.jit, static_argnames=("cfg",))(
-            lambda p, t, ln, tb, pk, pv, pks, pvs, cfg: paged_decode_step(
-                p, t, ln, tb, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
+        # Donating the pools lets XLA run the fused token-append scatter in
+        # place (None scales in the kv16 case contribute no buffers); the
+        # engine rebinds via cache.set_pools right after each call and never
+        # reuses the old arrays, so the donated buffers are safely dead.
+        self._decode_fn = functools.partial(
+            jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
+        )(
+            lambda p, t, ln, tb, vl, pk, pv, pks, pvs, cfg: paged_decode_step(
+                p, t, ln, tb, vl, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
             )
         )
         self.stats = EngineStats()
@@ -276,18 +285,25 @@ class ServeEngine:
             positions = np.array([r.cache_len for r in reqs], np.int64)
             width = max(len(cache.table(r)) for r in rids)
             width = 1 << (width - 1).bit_length()  # pow2-bucket to limit retraces
-            tables = cache.table_array(rids, width)
-            tokens = jnp.asarray(
-                np.array([[r.out_tokens[-1]] for r in reqs], np.int32)
-            )
-            lengths = jnp.asarray(positions.astype(np.int32))
-            logits, new_kv = self._decode_fn(
-                self.params_for(w_bits), tokens, lengths, tables,
+            # pow2-bucket the batch dimension too, so admitting/retiring one
+            # request doesn't retrace the jitted decode step
+            n_real = len(reqs)
+            bsz = 1 << (n_real - 1).bit_length()
+            tables = np.zeros((bsz, width), np.int32)
+            tables[:n_real] = cache.table_array(rids, width)
+            tokens = np.zeros((bsz, 1), np.int32)
+            tokens[:n_real] = np.array([[r.out_tokens[-1]] for r in reqs], np.int32)
+            lengths = np.zeros(bsz, np.int32)
+            lengths[:n_real] = positions.astype(np.int32)
+            valid = np.arange(bsz) < n_real
+            logits, new_pools = self._decode_fn(
+                self.params_for(w_bits), jnp.asarray(tokens),
+                jnp.asarray(lengths), jnp.asarray(tables), jnp.asarray(valid),
                 cache.k, cache.v, cache.k_scale, cache.v_scale, cfg=cfg_g,
             )
             jax.block_until_ready(logits)
-            cache.write_token(rids, positions, new_kv)
-            next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+            cache.set_pools(*new_pools)  # new tokens scattered in-kernel
+            next_tok = np.asarray(jnp.argmax(logits[:n_real], axis=-1))
             for i, req in enumerate(reqs):
                 req.cache_len += 1
                 req.out_tokens.append(int(next_tok[i]))

@@ -112,14 +112,16 @@ class PagedKVCache:
         """Cache positions currently addressable by rid's page table."""
         return len(self._tables[rid]) * self.page_size
 
-    def table_array(self, rids: list[int], width: int) -> jnp.ndarray:
+    def table_array(self, rids: list[int], width: int) -> np.ndarray:
         """[B, width] int32 page-table matrix, zero-padded (padded entries
-        gather page 0; they are masked out by per-row lengths downstream)."""
+        gather page 0; they are masked out by per-row lengths downstream).
+        Host-side np so the engine can batch-pad without a device
+        round-trip; jit'd consumers convert on entry."""
         out = np.zeros((len(rids), width), np.int32)
         for i, rid in enumerate(rids):
             t = self._tables[rid]
             out[i, : len(t)] = t
-        return jnp.asarray(out)
+        return out
 
     def stats(self) -> PageCacheStats:
         return PageCacheStats(self.num_pages, len(self._free), self._high_water)
@@ -128,6 +130,15 @@ class PagedKVCache:
         self._high_water = max(self._high_water, self.num_pages - len(self._free))
 
     # -------------------------------------------------------------- payloads
+    def set_pools(self, k, v, k_scale=None, v_scale=None) -> None:
+        """Adopt pool arrays returned by the jitted decode step (which
+        scatters each new token into its page in-kernel)."""
+        self.k = k
+        self.v = v
+        if self.quantized:
+            self.k_scale = k_scale
+            self.v_scale = v_scale
+
     def write_prompt(self, rid: int, k, v, k_scale=None, v_scale=None) -> None:
         """Scatter a prefilled contiguous cache row into this request's pages.
 
