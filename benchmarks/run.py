@@ -1,54 +1,92 @@
 """Benchmark harness: one section per paper table/figure + kernel microbench
-+ the serving-engine throughput sweep.
++ the serving-engine latency/throughput sweep + the prefix-cache workload.
 
 Prints ``name,value,paper_value,rel_err`` CSV per reproduction row and
 ``name,us_per_call,derived`` for the microbenchmarks.  Roofline tables come
 from the dry-run artifacts (python -m repro.launch.roofline), not this box's
 CPU walltime.
 
-``--smoke`` runs only the kernel microbenchmarks at small shapes (plus one
-tiny serving row) — a CI guard that the perf plumbing keeps importing,
-compiling and producing sane numbers; the paper tables and full sweeps stay
-out of the hot CI path.
+``--smoke`` runs only the kernel microbenchmarks at small shapes plus one
+tiny serving row and the shared-prefix cold/warm TTFT row — a CI guard that
+the perf plumbing keeps importing, compiling and producing sane numbers (and
+that a warm prefix cache actually cuts TTFT); the paper tables and full
+sweeps stay out of the hot CI path.  ``--json PATH`` additionally writes the
+smoke rows as JSON so CI can archive the bench trajectory per PR
+(``BENCH_smoke.json`` artifacts).
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 
-def smoke() -> None:
+def smoke(json_path: str | None = None) -> None:
+    import math
+
     from benchmarks import kernel_bench, serve_bench
+
+    artifact: dict[str, float] = {}
+    failures: list[str] = []  # gates deferred so the artifact always lands
 
     print("# === Kernel microbench (smoke shapes) ===")
     print("name,us_per_call,derived")
     rows = kernel_bench.rows(smoke=True)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.2f}")
-    # hard exits, not asserts: the guard must survive python -O
-    import math
-
+        artifact[f"{name}_us"] = us
     if not all(math.isfinite(us) and math.isfinite(d) for _, us, d in rows):
-        raise SystemExit("smoke: non-finite benchmark value")
+        failures.append("non-finite benchmark value")
     if not any(n.startswith("decode_paged") for n, _, _ in rows):
-        raise SystemExit("smoke: paged decode rows missing from kernel_bench")
+        failures.append("paged decode rows missing from kernel_bench")
 
     print("\n# === Serving engine (smoke) ===")
-    print("name,decode_tok_per_s,mean_batch_occupancy")
-    tok_s, occ = serve_bench._run_one(2, [8])
-    print(f"serve_w8_b2,{tok_s:.1f},{occ:.2f}")
-    if not tok_s > 0:
-        raise SystemExit("smoke: serving throughput not positive")
+    print(serve_bench.HEADER)
+    r = serve_bench._run_one(2, [8])
+    print(serve_bench.format_row("serve_w8_b2", r))
+    artifact.update({f"serve_w8_b2_{k}": v for k, v in r.items()})
+    if not r["decode_tok_per_s"] > 0:
+        failures.append("serving throughput not positive")
+
+    print("\n# === Prefix cache (shared system prompt, cold vs warm TTFT) ===")
+    print("name,value")
+    sp = serve_bench.shared_prefix_stats(n_iters=3)
+    for k, v in sp.items():
+        print(f"shared_prefix_{k},{v:.3f}")
+        artifact[f"shared_prefix_{k}"] = v
+    if not sp["warm_ttft_ms"] < sp["cold_ttft_ms"]:
+        failures.append("warm prefix cache slower than cold prefill")
+    if sp["prefix_share"] >= 0.5 and sp["ttft_speedup"] < 2.0:
+        failures.append(
+            f"warm-vs-cold TTFT speedup {sp['ttft_speedup']:.2f}x "
+            f"< 2x at {sp['prefix_share']:.0%} prefix share"
+        )
+    if sp["prefix_hit_rate"] <= 0:
+        failures.append("prefix cache never hit")
+
+    # write the trajectory BEFORE gating: failing runs are exactly the ones
+    # whose numbers the CI artifact exists to preserve
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(artifact, f, indent=1, sort_keys=True)
+        print(f"\n# wrote {len(artifact)} rows to {json_path}")
+    if failures:
+        # hard exit, not assert: the guard must survive python -O
+        raise SystemExit("smoke: " + "; ".join(failures))
 
 
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
         "--smoke", action="store_true",
-        help="small-shape kernel + serving smoke run (CI guard)",
+        help="small-shape kernel + serving + prefix-cache smoke run (CI guard)",
+    )
+    parser.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="write smoke rows as JSON (bench-trajectory artifact)",
     )
     args = parser.parse_args()
     if args.smoke:
-        smoke()
+        smoke(args.json)
         return
 
     from benchmarks import fig3, fig4, kernel_bench, serve_bench, table1
@@ -76,10 +114,15 @@ def main() -> None:
     for name, us, derived in kernel_bench.rows():
         print(f"{name},{us:.1f},{derived:.2f}")
 
-    print("\n# === Serving engine (continuous batching, tokens/s by batch & precision mix) ===")
-    print("name,decode_tok_per_s,mean_batch_occupancy")
-    for name, tok_s, occ in serve_bench.rows():
-        print(f"{name},{tok_s:.1f},{occ:.2f}")
+    print("\n# === Serving engine (continuous batching, by batch & precision mix) ===")
+    print(serve_bench.HEADER)
+    for name, r in serve_bench.rows():
+        print(serve_bench.format_row(name, r))
+
+    print("\n# === Prefix cache (shared system prompt, cold vs warm TTFT) ===")
+    print("name,value")
+    for k, v in serve_bench.shared_prefix_stats().items():
+        print(f"shared_prefix_{k},{v:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Multi-precision continuous-batching serving (the paper's deployment
 story): W4A16, W8A16 and bf16 requests share ONE engine and decode in the
-same engine steps — one batched kernel call per precision group — instead of
-running three separate servers.
+same engine steps — one batched kernel call per precision group — and
+requests with the same system prompt share prefix-cache KV pages instead of
+re-prefilling them (cross-precision isolated: a bf16 request must never read
+int8 prefix pages, and W4-computed K/V never serves a W8 request).
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -21,17 +23,24 @@ base = dataclasses.replace(
 params = T.init_params(base, jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
 
-engine = ServeEngine(base, params, max_slots=6, num_pages=48, page_size=8)
+engine = ServeEngine(base, params, max_slots=6, num_pages=96, page_size=8)
 
-# a mixed-precision request stream: per-request weight AND KV precision
+# every request shares one 16-token system prompt + a unique 8-token tail
+SYSTEM_PROMPT = rng.integers(0, base.vocab, 16).astype(np.int32)
+def prompt():
+    return np.concatenate([SYSTEM_PROMPT, rng.integers(0, base.vocab, 8).astype(np.int32)])
+
+# wave 1 seeds the prefix cache: one request per (w_bits, kv_bits) group
+SEED_SPEC = [(4, 8), (8, 8), (16, 16)]
+for w, kv in SEED_SPEC:
+    engine.submit(prompt(), 12, w_bits=w, kv_bits=kv)
+    engine.run()
+seeded_hits = engine.stats.prefix_hit_tokens
+assert seeded_hits == 0, "disjoint precision groups must not share prefix pages"
+
+# wave 2: same mixed-precision stream, warm prefix cache per group
 SPEC = [(4, 8), (8, 8), (4, 8), (8, 8), (16, 16), (4, 8)]
-reqs = [
-    engine.submit(
-        rng.integers(0, base.vocab, 12).astype(np.int32), 12,
-        w_bits=w, kv_bits=kv,
-    )
-    for w, kv in SPEC
-]
+reqs = [engine.submit(prompt(), 12, w_bits=w, kv_bits=kv) for w, kv in SPEC]
 engine.run()
 
 def payload_bytes(tree):
@@ -55,6 +64,19 @@ print(f"decode kernel groups: "
       + ", ".join(f"w{w}/kv{k}x{n}" for (w, k), n in sorted(s.group_calls.items())))
 print(f"engine steps decoding >=2 precision groups at once: {s.mixed_precision_steps}")
 assert s.mixed_precision_steps > 0, "expected W4 and W8 requests in one decode batch"
+
+# every wave-2 request hit its own precision group's cached system prompt —
+# and ONLY its own group's: the int8 pool serves w4 and w8 requests from
+# *separate* page chains (hash-chain salt), bf16 from a separate pool.
+print(f"\nprefix cache: hit rate {s.prefix_hit_rate:.0%} of admitted prompt "
+      f"tokens ({s.prefix_hit_tokens} cached / {s.prefix_new_tokens} computed)")
+for kv_bits in (8, 16):
+    pc = engine.prefix_cache_for(kv_bits)
+    print(f"  kv{kv_bits} pool: {pc.num_entries} cached blocks, "
+          f"{pc.stats.evictions} evicted, {pc.stats.forks} CoW forks")
+assert s.prefix_hit_tokens == 16 * len(SPEC), "warm wave should hit the full system prompt"
+
 print("\n(W4+W8+bf16 requests were continuously batched in one engine; "
-      "w4 halves the w8 matmul-weight payload and greedy continuations stay "
-      "consistent)")
+      "w4 halves the w8 matmul-weight payload, greedy continuations stay "
+      "consistent, and the shared system prompt prefilled once per precision "
+      "group — never across groups)")

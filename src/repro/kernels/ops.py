@@ -21,6 +21,7 @@ from repro.core.precision import Precision
 from repro.kernels import mpmm as mpmm_mod
 from repro.kernels import mqa_decode as dec_mod
 from repro.kernels import paged_decode as paged_mod
+from repro.kernels import paged_prefill as paged_prefill_mod
 from repro.kernels import ref as ref_mod
 from repro.quant.pack import pack_int4
 
@@ -32,6 +33,7 @@ __all__ = [
     "quantize_kv",
     "mqa_decode",
     "paged_mqa_decode",
+    "paged_mqa_prefill",
 ]
 
 _INT_DTYPE = {4: jnp.int8, 8: jnp.int8, 16: jnp.int16}
@@ -327,3 +329,70 @@ def paged_mqa_decode(
             interpret=interpret,
         )
     return out.reshape(b, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_bits", "backend", "interpret"))
+def paged_mqa_prefill(
+    q: jnp.ndarray,  # [B, C, H, D] — a chunk of C query tokens per row
+    k_pool: jnp.ndarray,  # [L, P, ps, Hkv, D (/2 if kv_bits==4)]
+    v_pool: jnp.ndarray,
+    k_scale,  # [L, P, ps, Hkv, 1] f32, or None when kv_bits == 16
+    v_scale,
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    ctx_lens: jnp.ndarray,  # [B] int32 — tokens already in the pool
+    q_lens: jnp.ndarray,  # [B] int32 — valid chunk tokens per row
+    layer,  # int32 — pool layer to attend against
+    chunk_k: jnp.ndarray,  # [B, C, Hkv, D (/2)] this chunk's K, not yet stored
+    chunk_v: jnp.ndarray,
+    chunk_k_scale=None,  # [B, C, Hkv, 1] f32, or None
+    chunk_v_scale=None,
+    *,
+    kv_bits: int = 8,
+    window=None,  # int or traced scalar (per-layer windows come from scan)
+    backend: Optional[Literal["pallas", "xla"]] = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Chunked-prefill GQA attention straight against the paged KV pool.
+
+    Chunk token c (absolute position ctx_lens[b] + c) attends to the pages
+    holding each row's ctx_lens[b] cached tokens plus the chunk itself under
+    a causal-within-chunk mask; rows may be padded (q_lens < C).  Same
+    dispatch contract as :func:`paged_mqa_decode`."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if backend is None:
+        backend = "xla" if jax.default_backend() != "tpu" else "pallas"
+    b, c, h, d = q.shape
+    hkv = k_pool.shape[3]
+    # [B, C, H, D] -> [B, Hkv, C, G, D]; chunk K/V -> [B, Hkv, C, Dk]
+    qg = q.reshape(b, c, hkv, h // hkv, d).transpose(0, 2, 1, 3, 4)
+    t = lambda x: None if x is None else x.transpose(0, 2, 1, 3)
+    sm_scale = 1.0 / float(np.sqrt(d))
+    args = (
+        qg,
+        k_pool,
+        v_pool,
+        k_scale,
+        v_scale,
+        tables.astype(jnp.int32),
+        ctx_lens.astype(jnp.int32),
+        q_lens.astype(jnp.int32),
+        jnp.asarray(layer, jnp.int32),
+        t(chunk_k),
+        t(chunk_v),
+        t(chunk_k_scale),
+        t(chunk_v_scale),
+    )
+    if backend == "xla":
+        out = paged_prefill_mod.paged_mqa_prefill_xla(
+            *args, kv_bits=kv_bits, sm_scale=sm_scale, window=window
+        )
+    else:
+        out = paged_prefill_mod.paged_mqa_prefill_pallas(
+            *args,
+            kv_bits=kv_bits,
+            sm_scale=sm_scale,
+            window=window,
+            interpret=interpret,
+        )
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, c, h, d)

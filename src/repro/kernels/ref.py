@@ -9,7 +9,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["mpmm_ref", "mpconv_ref", "mqa_decode_ref", "paged_mqa_decode_ref"]
+__all__ = [
+    "mpmm_ref",
+    "mpconv_ref",
+    "mqa_decode_ref",
+    "paged_mqa_decode_ref",
+    "paged_mqa_prefill_ref",
+]
 
 
 def _unpack_w4_k(packed: jnp.ndarray) -> jnp.ndarray:
@@ -183,3 +189,82 @@ def paged_mqa_decode_ref(
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_mqa_prefill_ref(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    k_scale,
+    v_scale,
+    tables: jnp.ndarray,
+    ctx_lens: jnp.ndarray,
+    q_lens: jnp.ndarray,
+    layer,
+    chunk_k: jnp.ndarray,
+    chunk_v: jnp.ndarray,
+    chunk_k_scale=None,
+    chunk_v_scale=None,
+    *,
+    sm_scale: float,
+    window=None,
+) -> jnp.ndarray:
+    """Oracle for kernels/paged_prefill.py — a C-token query chunk attending
+    to a *paged* quantized KV pool plus the chunk's own (not-yet-stored) K/V.
+
+    q:        [B, C, H, D]
+    k_pool:   [L, P, ps, Hkv, D]  int8 payload (pre-unpacked for kv4) or float
+    tables:   [B, W] int32 — page ids, zero-padded past each row's table
+    ctx_lens: [B] int32 — tokens already materialized; chunk token c sits at
+              absolute position ctx_lens[b] + c
+    q_lens:   [B] int32 — valid chunk tokens per row (<= C; rest is padding
+              whose output rows are unspecified garbage)
+    chunk_k:  [B, C, Hkv, D] payload of this chunk (same dtype as pool)
+    returns:  [B, C, H, D] in q.dtype
+
+    Semantics are gather-based on purpose: pages are collected into the
+    contiguous [B, W*ps, ...] view, the chunk K/V is appended as extra keys
+    at positions ctx + j, and one plain masked softmax runs over both — the
+    computation chunked prefill must reproduce without the gather.
+    """
+    b, c, h, d = q.shape
+    ps, hkv = k_pool.shape[2], k_pool.shape[3]
+    w = tables.shape[1]
+    s = w * ps
+    ctx_lens = ctx_lens.astype(jnp.int32)
+    q_lens = q_lens.astype(jnp.int32)
+
+    def gather(pool, scale, new, new_scale):
+        g = pool[layer][tables]  # [B, W, ps, Hkv, *]
+        g = g.reshape(b, s, *g.shape[3:]).astype(jnp.float32)
+        if scale is not None:
+            sc = scale[layer][tables].reshape(b, s, hkv, 1).astype(jnp.float32)
+            g = g * sc
+        nf = new.astype(jnp.float32)
+        if new_scale is not None:
+            nf = nf * new_scale.astype(jnp.float32)
+        return jnp.concatenate([g, nf], axis=1)  # [B, S + C, Hkv, D]
+
+    kf = gather(k_pool, k_scale, chunk_k, chunk_k_scale)
+    vf = gather(v_pool, v_scale, chunk_v, chunk_v_scale)
+    cpos = jnp.arange(c, dtype=jnp.int32)
+    # absolute position of every key: pool slots then chunk slots
+    k_pos = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s)),
+         ctx_lens[:, None] + cpos[None, :]], axis=1,
+    )  # [B, S + C]
+    k_valid = jnp.concatenate(
+        [jnp.arange(s, dtype=jnp.int32)[None, :] < ctx_lens[:, None],
+         jnp.broadcast_to(cpos[None, :] < q_lens[:, None], (b, c))], axis=1,
+    )
+    q_pos = ctx_lens[:, None] + cpos[None, :]  # [B, C]
+    mask = k_valid[:, None, :] & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window is not None:
+        mask = mask & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    qf = q.astype(jnp.float32).reshape(b, c, hkv, h // hkv, d)
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qf, kf) * sm_scale
+    scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked padding rows
+    out = jnp.einsum("bkgcs,bskd->bkgcd", p, vf)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, c, h, d).astype(q.dtype)

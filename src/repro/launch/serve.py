@@ -2,12 +2,17 @@
 (the paper's use case at traffic).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
-        --requests 8 --new-tokens 16 --precision-mix 4,8
+        --requests 8 --new-tokens 16 --precision-mix 4,8 --shared-prefix 64
 
 ``--precision-mix`` assigns weight precisions to requests round-robin, so a
 single engine decodes W4A16 and W8A16 requests in the same step (one batched
 kernel call per precision group).  ``--w-bits`` forces one precision for all
 requests (0 = arch default); ``--no-quantize`` serves raw bf16 weights.
+``--shared-prefix N`` gives every request the same N-token system prompt:
+the first request prefills it cold, every follower adopts the cached prefix
+pages and prefills only its unique tail (see the prefix_* stats in the
+output).  ``--prefill-chunk`` bounds per-step prefill work so long prompts
+interleave with running decodes; ``--no-prefix-cache`` disables reuse.
 """
 from __future__ import annotations
 
@@ -34,6 +39,16 @@ def main() -> None:
     )
     ap.add_argument("--kv-bits", type=int, default=0, help="0 = arch default")
     ap.add_argument("--no-quantize", action="store_true")
+    ap.add_argument(
+        "--shared-prefix", type=int, default=0, metavar="N",
+        help="first N prompt tokens shared by every request (system prompt); "
+        "followers hit the prefix cache and prefill only their tails",
+    )
+    ap.add_argument(
+        "--prefill-chunk", type=int, default=32,
+        help="max prompt tokens prefilled per engine step (chunked prefill)",
+    )
+    ap.add_argument("--no-prefix-cache", action="store_true")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -51,10 +66,19 @@ def main() -> None:
     else:
         mix = [args.w_bits or arch.serve_w_bits]
     kv_bits = args.kv_bits or arch.serve_kv_bits
+    if args.shared_prefix >= args.prompt_len:
+        raise SystemExit("--shared-prefix must be < --prompt-len")
 
     params = model_lib.init_params(arch, jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.new_tokens + arch.prefix_len + 8
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, arch.vocab, args.shared_prefix).astype(np.int32)
+
+    def prompt() -> np.ndarray:
+        tail = rng.integers(
+            0, arch.vocab, args.prompt_len - args.shared_prefix
+        ).astype(np.int32)
+        return np.concatenate([shared, tail])
 
     if not ServeEngine.supports(arch):
         # recurrent-cache archs: static-wave fallback (single precision)
@@ -65,11 +89,7 @@ def main() -> None:
             quantize=not args.no_quantize,
         )
         reqs = [
-            Request(
-                rid=i,
-                prompt=rng.integers(0, arch.vocab, args.prompt_len).astype(np.int32),
-                max_new_tokens=args.new_tokens,
-            )
+            Request(rid=i, prompt=prompt(), max_new_tokens=args.new_tokens)
             for i in range(args.requests)
         ]
         srv.serve(reqs)
@@ -93,11 +113,12 @@ def main() -> None:
         max_slots=args.batch_size,
         num_pages=args.batch_size * pages_per_slot,
         page_size=args.page_size,
+        prefill_chunk=args.prefill_chunk,
+        enable_prefix_cache=not args.no_prefix_cache,
     )
     reqs = [
         engine.submit(
-            rng.integers(0, arch.vocab, args.prompt_len).astype(np.int32),
-            args.new_tokens,
+            prompt(), args.new_tokens,
             w_bits=mix[i % len(mix)],
             kv_bits=kv_bits,
         )
@@ -105,15 +126,22 @@ def main() -> None:
     ]
     engine.run()
     stats = engine.stats
+    ttfts = sorted(stats.ttfts)
     print(json.dumps({
         "arch": arch.name,
         "w_bits_mix": mix,
         "kv_bits": kv_bits,
         "requests": len(reqs),
+        "shared_prefix": args.shared_prefix,
         "tokens_out": stats.tokens_out,
         "prefill_s": round(stats.prefill_s, 3),
+        "prefill_chunks": stats.prefill_chunks,
         "decode_s": round(stats.decode_s, 3),
         "decode_tok_per_s": round(stats.decode_tok_per_s, 1),
+        "ttft_ms_first": round(ttfts[0] * 1e3, 1) if ttfts else None,
+        "ttft_ms_last": round(ttfts[-1] * 1e3, 1) if ttfts else None,
+        "prefix_hit_rate": round(stats.prefix_hit_rate, 3),
+        "prefix_hit_tokens": stats.prefix_hit_tokens,
         "decode_group_calls": {f"w{w}kv{k}": n for (w, k), n in stats.group_calls.items()},
         "mixed_precision_steps": stats.mixed_precision_steps,
         "mean_batch_occupancy": round(stats.mean_batch_occupancy, 2),

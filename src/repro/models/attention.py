@@ -187,3 +187,52 @@ def paged_decode_attention(
         window=window,
     )
     return out.reshape(b, 1, h, d)
+
+
+def paged_prefill_attention(
+    q: jnp.ndarray,  # [B, C, H, D] — a chunk of C query tokens
+    k_pool: jnp.ndarray,  # [L, P, ps, Hkv, Dk]  (int8 payload or bf16)
+    v_pool: jnp.ndarray,
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    ctx_lens: jnp.ndarray,  # [B] int32 — tokens already in the pool
+    q_lens: jnp.ndarray,  # [B] int32 — valid chunk tokens per row (<= C)
+    layer,  # int32 — which pool layer this block attends against
+    chunk_k: jnp.ndarray,  # [B, C, Hkv, Dk] this chunk's K/V (not yet pooled)
+    chunk_v: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # [L, P, ps, Hkv, 1] when quantized
+    v_scale: Optional[jnp.ndarray] = None,
+    chunk_k_scale: Optional[jnp.ndarray] = None,  # [B, C, Hkv, 1]
+    chunk_v_scale: Optional[jnp.ndarray] = None,
+    kv_bits: int = 16,
+) -> jnp.ndarray:
+    """Chunked-prefill attention straight against the paged KV pool.
+
+    The chunk analogue of :func:`paged_decode_attention`: chunk token c sits
+    at absolute position ``ctx_lens[b] + c``, attends to every pooled token
+    before it through the page tables plus the chunk itself causally, and the
+    caller scatters the chunk's K/V into its pages afterwards.  Rows whose
+    chunk is bucket-padded set ``q_lens[b] < C``; padded rows produce
+    garbage outputs the caller slices off.  Dispatches to the Pallas kernel
+    on TPU and its slot-scan XLA fallback elsewhere
+    (kernels/ops.py::paged_mqa_prefill)."""
+    from repro.kernels import ops
+
+    return ops.paged_mqa_prefill(
+        q,
+        k_pool,
+        v_pool,
+        k_scale,
+        v_scale,
+        tables,
+        ctx_lens,
+        q_lens,
+        layer,
+        chunk_k,
+        chunk_v,
+        chunk_k_scale,
+        chunk_v_scale,
+        kv_bits=kv_bits,
+        window=window,
+    )

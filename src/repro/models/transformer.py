@@ -355,11 +355,17 @@ def train_loss(params: Params, batch, cfg: ArchConfig, mesh=None) -> tuple[jnp.n
 
 # ============================================================== serving ====
 def _quantize_token_kv(kv: jnp.ndarray, bits: int):
-    """[..., hd] -> (int8 payload, f32 scale[..., 1]) per (token, head)."""
+    """[..., hd] -> (int8 payload, f32 scale[..., 1]) per (token, head).
+    bits == 4 bit-packs nibble pairs along hd, so the payload trailing dim is
+    hd//2 (matching the int4 page-pool layout)."""
     amax = jnp.maximum(jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1, keepdims=True), 1e-30)
     qmax = float(2 ** (bits - 1) - 1)
     scale = amax / qmax
     q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -qmax - 1, qmax).astype(jnp.int8)
+    if bits == 4:
+        from repro.quant.pack import pack_int4
+
+        q = pack_int4(q, axis=-1)
     return q, scale.astype(jnp.float32)
 
 
@@ -369,6 +375,8 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_len: int) -> Params:
     dominant serving memory consumer), bf16 otherwise."""
     kv, hd = cfg.n_kv_heads, cfg.hd
     quant = cfg.serve_kv_bits < 16
+    if cfg.serve_kv_bits == 4:
+        hd = hd // 2  # nibble-packed payload (the paged serve path unpacks)
     kv_dtype = jnp.int8 if quant else jnp.dtype(cfg.dtype)
     cache: Params = {"pos": jnp.zeros((), jnp.int32)}
     if cfg.family in ("dense", "vlm", "audio", "moe"):
@@ -534,6 +542,11 @@ def _decode_attn(p, x, cache_slice, pos, cfg: ArchConfig, window):
     """One-layer decode attention: x [B,1,D] + cache slice -> (out, new kv)."""
     from repro.models.layers import apply_rope
 
+    if cfg.serve_kv_bits == 4:
+        raise NotImplementedError(
+            "int4 KV payloads are nibble-packed; only the paged serve path "
+            "(serve/decode.py) unpacks them — use ServeEngine, not decode_step"
+        )
     b = x.shape[0]
     kv, hd, h = cfg.n_kv_heads, cfg.hd, cfg.n_heads
     xn = rms_norm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)

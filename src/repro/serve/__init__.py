@@ -10,27 +10,36 @@ decodes in a handful of batched calls instead of one model call per request.
 
 Layers (bottom-up):
 
-  * request.py   — ``ServeRequest`` lifecycle (WAITING → RUNNING → FINISHED).
-  * kv_cache.py  — ``PagedKVCache``: fixed-size page pool + per-request page
-    tables, int8-with-scales or bf16 payloads.
-  * scheduler.py — FCFS admission with head-of-line blocking (no starvation)
-    and youngest-first preemption when the page pool runs dry.
-  * decode.py    — jit'd ragged batched decode step over gathered pages.
-  * engine.py    — ``ServeEngine`` tying it together; ``EngineStats``.
+  * request.py      — ``ServeRequest`` lifecycle (WAITING → RUNNING →
+    FINISHED).
+  * kv_cache.py     — ``PagedKVCache``: fixed-size page pool + per-request
+    page tables, int4/int8-with-scales or bf16 payloads, per-page refcounts
+    and copy-on-write forking for cross-request sharing.
+  * prefix_cache.py — ``PrefixCache``: block-hash chains mapping full token
+    blocks to their pages; LRU eviction of unreferenced pages.
+  * scheduler.py    — FCFS admission with head-of-line blocking (no
+    starvation) and youngest-first preemption when the page pool runs dry.
+  * prefill.py      — jit'd chunked-prefill step (cached prefixes skipped,
+    ragged pow2-bucketed suffix chunks, interleaved with decode).
+  * decode.py       — jit'd ragged batched decode step over the page pool.
+  * engine.py       — ``ServeEngine`` tying it together; ``EngineStats``.
 
 Entry points: ``repro.launch.serve`` (CLI), ``repro.train.server.Server``
 (compat wrapper), ``examples/serve_quantized.py``, ``benchmarks/serve_bench``.
 """
 from repro.serve.engine import EngineStats, ServeEngine
 from repro.serve.kv_cache import PagedKVCache
+from repro.serve.prefix_cache import PrefixCache, block_hashes
 from repro.serve.request import RequestState, ServeRequest
 from repro.serve.scheduler import Scheduler
 
 __all__ = [
     "EngineStats",
     "PagedKVCache",
+    "PrefixCache",
     "RequestState",
     "Scheduler",
     "ServeEngine",
     "ServeRequest",
+    "block_hashes",
 ]

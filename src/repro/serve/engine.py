@@ -1,19 +1,35 @@
-"""ServeEngine: continuous batching with per-request precision.
+"""ServeEngine: continuous batching with per-request precision and
+prefix-cache-aware chunked prefill.
 
 One engine step:
 
-  1. **Finish/free** — requests that hit their token budget leave the batch
-     and return their KV pages to the pool.
-  2. **Admit + prefill** — waiting requests are admitted FCFS while batch
-     slots and KV pages last (head-of-line blocking, see scheduler.py).
-     Admitted requests with identical (w_bits, kv_bits, prompt_len) prefill
-     as one batched ``models.transformer.prefill`` call; the resulting
-     contiguous cache rows are scattered into their page tables and the
-     prefill logits yield each request's first token.
+  1. **Admit** — waiting requests are admitted FCFS while batch slots and KV
+     pages last (head-of-line blocking, see scheduler.py).  Admission looks
+     the request's prompt up in the per-pool **prefix cache**
+     (prefix_cache.py): the longest chain of cached full token blocks is
+     adopted read-only into the request's page table (refcounted sharing),
+     capped at ``prompt_len - 1`` so at least one token runs through the
+     model to produce the first logits — when that cap lands mid-page, the
+     shared page is **copy-on-write forked** before the suffix overwrites
+     it.  Only the *uncached* suffix needs fresh pages and compute, so
+     admission cost scales with uncached tokens.
+  2. **Chunked prefill** (prefill.py) — prefilling requests advance through
+     their uncached suffix at most ``prefill_chunk`` tokens per step,
+     interleaved with running decodes (long prompts no longer stall the
+     batch).  Requests whose remaining suffix fits one chunk are grouped by
+     (w_bits, kv_bits, pow2 length bucket) and share ONE
+     ``chunk_prefill_step`` call with ragged ``q_lens`` — mixed-length
+     admissions no longer pay one trace+call per distinct prompt length.
+     The call that completes a prompt yields the request's first token, and
+     the request's full prompt blocks are registered back into the prefix
+     cache for followers to hit.
   3. **Grow/evict** — any running request about to cross a page boundary
-     gets one more page; if the pool is dry, the youngest running request on
-     that pool is preempted (pages freed, recompute-on-readmit — greedy
-     decoding makes the replay deterministic).
+     gets one more page; if the pool is dry the prefix cache's LRU retained
+     pages are evicted first, then the youngest running request on that pool
+     is preempted.  Preemption *releases* pages into the cache (registering
+     every materialized full block), so a preempted request usually resumes
+     from still-cached pages and recomputes only what eviction actually
+     took.
   4. **Decode** — running requests are grouped by (w_bits, kv_bits); each
      group makes ONE ``paged_decode_step`` call (batched mpmm projections +
      paged-kernel attention reading the page pool in place), which also
@@ -24,10 +40,14 @@ One engine step:
      ``stats.mixed_precision_steps``.
 
 Requests never wait for batch-mates: a request admitted at step N starts
-decoding at step N alongside requests admitted long before.
+prefilling at step N alongside requests decoding since long before.
+Archs with frontend prefix embeddings (cfg.prefix_len > 0) keep the legacy
+one-shot-prefill path and skip the prefix cache (prefix embeddings are not
+token-addressable).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
@@ -42,10 +62,37 @@ from repro.configs.base import ArchConfig
 from repro.models import transformer as model_lib
 from repro.serve.decode import paged_decode_step
 from repro.serve.kv_cache import PagedKVCache
+from repro.serve.prefill import bucket_pow2, chunk_prefill_step
+from repro.serve.prefix_cache import PrefixCache, block_hashes
 from repro.serve.request import RequestState, ServeRequest
 from repro.serve.scheduler import Scheduler
 
 _SUPPORTED_FAMILIES = ("dense", "vlm", "audio", "moe")
+
+
+@functools.lru_cache(maxsize=1)
+def _shared_jits():
+    """Jitted engine steps for the mesh=None case, shared process-wide so a
+    fresh engine reuses compiled code (mesh objects aren't hashable jit
+    statics, so meshed engines keep per-engine closures)."""
+    prefill = functools.partial(jax.jit, static_argnames=("cfg", "max_len"))(
+        lambda p, b, cfg, max_len: model_lib.prefill(p, b, cfg, max_len, None)
+    )
+    decode = functools.partial(
+        jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
+    )(
+        lambda p, t, ln, tb, vl, pk, pv, pks, pvs, cfg: paged_decode_step(
+            p, t, ln, tb, vl, pk, pv, pks, pvs, cfg=cfg, mesh=None
+        )
+    )
+    chunk = functools.partial(
+        jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
+    )(
+        lambda p, t, qs, ql, tb, pk, pv, pks, pvs, cfg: chunk_prefill_step(
+            p, t, qs, ql, tb, pk, pv, pks, pvs, cfg=cfg, mesh=None
+        )
+    )
+    return prefill, decode, chunk
 
 
 @dataclass
@@ -55,11 +102,22 @@ class EngineStats:
     decode_steps: int = 0  # batched decode kernel-group calls
     engine_steps: int = 0
     tokens_out: int = 0
-    prefills: int = 0
+    prefills: int = 0  # completed request prefills
+    prefill_chunks: int = 0  # chunk_prefill_step calls
     preemptions: int = 0
     mixed_precision_steps: int = 0  # engine steps decoding >= 2 precision groups
     occupancy_sum: int = 0  # sum of decode group sizes (mean = /decode_steps)
     group_calls: dict = field(default_factory=dict)  # (w_bits, kv_bits) -> calls
+    prefix_hit_tokens: int = 0  # prompt tokens served from cached pages
+    prefix_new_tokens: int = 0  # prompt tokens actually computed
+    # latency samples for percentile reporting, bounded so a long-lived
+    # engine doesn't grow them forever (recent window is what p50/p99 mean)
+    ttfts: collections.deque = field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )  # submit -> first token, seconds
+    decode_call_s: collections.deque = field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )  # per decode-group call walltime, seconds
 
     @property
     def mean_batch_occupancy(self) -> float:
@@ -68,6 +126,15 @@ class EngineStats:
     @property
     def decode_tok_per_s(self) -> float:
         return self.tokens_out / max(self.decode_s, 1e-9)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prefill tokens served from cached pages
+        instead of computed.  Readmissions count too: a preempted request's
+        replayed chain (prompt + generated tokens) is prefill work, and
+        blocks it re-adopts are recompute genuinely avoided."""
+        total = self.prefix_hit_tokens + self.prefix_new_tokens
+        return self.prefix_hit_tokens / max(total, 1)
 
 
 class ServeEngine:
@@ -87,6 +154,8 @@ class ServeEngine:
         max_slots: int = 8,
         num_pages: Optional[int] = None,
         page_size: int = 16,
+        prefill_chunk: int = 32,
+        enable_prefix_cache: bool = True,
         mesh=None,
     ):
         if not self.supports(cfg):
@@ -97,30 +166,49 @@ class ServeEngine:
                 + (" with first_dense" if cfg.first_dense else "")
                 + " — use repro.train.server.Server, which falls back to wave batching"
             )
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.cfg = cfg
         self.mesh = mesh
         self.page_size = page_size
         self.num_pages = num_pages if num_pages is not None else max_slots * 32
+        self.prefill_chunk = prefill_chunk
+        # frontend prefix embeddings are not token-addressable: those archs
+        # keep the legacy one-shot grouped prefill and no prefix cache
+        self._legacy_prefill = bool(cfg.prefix_len)
+        self._prefix_enabled = enable_prefix_cache and not self._legacy_prefill
         self._sched = Scheduler(max_slots)
         self._params = {16: params}  # w_bits -> param tree (quantized lazily)
         self._caches: dict[int, PagedKVCache] = {}  # kv_bits -> page pool
+        self._prefix: dict[int, PrefixCache] = {}  # kv_bits -> prefix cache
+        self._block_hashes: dict[int, list[bytes]] = {}  # rid -> prompt chain
         self._next_arrival = 0
         self._next_rid = 0
         self.finished: list[ServeRequest] = []
-        self._prefill_fn = functools.partial(
-            jax.jit, static_argnames=("cfg", "max_len")
-        )(lambda p, b, cfg, max_len: model_lib.prefill(p, b, cfg, max_len, mesh))
         # Donating the pools lets XLA run the fused token-append scatter in
         # place (None scales in the kv16 case contribute no buffers); the
         # engine rebinds via cache.set_pools right after each call and never
         # reuses the old arrays, so the donated buffers are safely dead.
-        self._decode_fn = functools.partial(
-            jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
-        )(
-            lambda p, t, ln, tb, vl, pk, pv, pks, pvs, cfg: paged_decode_step(
-                p, t, ln, tb, vl, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
+        if mesh is None:
+            self._prefill_fn, self._decode_fn, self._chunk_fn = _shared_jits()
+        else:
+            self._prefill_fn = functools.partial(
+                jax.jit, static_argnames=("cfg", "max_len")
+            )(lambda p, b, cfg, max_len: model_lib.prefill(p, b, cfg, max_len, mesh))
+            self._decode_fn = functools.partial(
+                jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
+            )(
+                lambda p, t, ln, tb, vl, pk, pv, pks, pvs, cfg: paged_decode_step(
+                    p, t, ln, tb, vl, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
+                )
             )
-        )
+            self._chunk_fn = functools.partial(
+                jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
+            )(
+                lambda p, t, qs, ql, tb, pk, pv, pks, pvs, cfg: chunk_prefill_step(
+                    p, t, qs, ql, tb, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
+                )
+            )
         self.stats = EngineStats()
 
     # -------------------------------------------------------------- plumbing
@@ -137,7 +225,13 @@ class ServeEngine:
                 page_size=self.page_size,
                 kv_bits=kv_bits,
             )
+            if self._prefix_enabled:
+                self._prefix[kv_bits] = PrefixCache(self._caches[kv_bits])
         return self._caches[kv_bits]
+
+    def prefix_cache_for(self, kv_bits: int) -> Optional[PrefixCache]:
+        self.cache_for(kv_bits)
+        return self._prefix.get(kv_bits)
 
     def _group_cfg(self, kv_bits: int) -> ArchConfig:
         return dataclasses.replace(self.cfg, serve_kv_bits=kv_bits)
@@ -147,6 +241,14 @@ class ServeEngine:
 
     def _max_ctx(self, req: ServeRequest) -> int:
         return self.cfg.prefix_len + len(req.prompt) + req.max_new_tokens
+
+    def _prefilling(self, req: ServeRequest) -> bool:
+        return req.cache_len < self._prefill_len(req)
+
+    def _chain_salt(self, req: ServeRequest) -> tuple:
+        # K/V values depend on the weight precision that computed them: W4
+        # and W8 requests must never share pages even in the same kv pool
+        return ("w", req.w_bits)
 
     # ---------------------------------------------------------------- submit
     def submit(
@@ -162,6 +264,8 @@ class ServeEngine:
         kv_bits = self.cfg.serve_kv_bits if kv_bits is None else kv_bits
         if w_bits not in (4, 8, 16):
             raise ValueError(f"w_bits must be 4, 8 or 16, got {w_bits}")
+        if kv_bits not in (4, 8, 16):
+            raise ValueError(f"kv_bits must be 4, 8 or 16, got {kv_bits}")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         if rid is not None:
@@ -177,6 +281,7 @@ class ServeEngine:
             w_bits=w_bits,
             kv_bits=kv_bits,
             arrival=self._next_arrival,
+            submit_ts=time.perf_counter(),
         )
         self._next_rid = max(self._next_rid, req.rid + 1)
         self._next_arrival += 1
@@ -189,7 +294,166 @@ class ServeEngine:
         self._sched.submit(req)
         return req
 
-    # --------------------------------------------------------------- prefill
+    # ------------------------------------------------- admission (prefix-aware)
+    def _try_admit(self, req: ServeRequest) -> bool:
+        """Admission check with commitment: on True the request holds its
+        full-prompt page table — cached prefix blocks adopted shared, the
+        divergence page CoW-forked, fresh pages for the uncached suffix."""
+        cache = self.cache_for(req.kv_bits)
+        ps = cache.page_size
+        plen = self._prefill_len(req)
+        n_pages = cache.pages_for(plen)
+        pc = self._prefix.get(req.kv_bits)
+        hashes: list[bytes] = []
+        pages: list[int] = []
+        if pc is not None:
+            # memoize the chain across admission retries: a head-of-line
+            # request blocked on a full pool is re-checked every engine step,
+            # and its feed chain only changes across preempt/readmit cycles
+            feed = req.feed_tokens()
+            hashes = self._block_hashes.get(req.rid, [])
+            if len(hashes) != len(feed) // ps:
+                hashes = block_hashes(feed, ps, self._chain_salt(req))
+                self._block_hashes[req.rid] = hashes
+            pages = pc.match(hashes)
+        # at least one suffix token must run through the model to produce the
+        # first-token logits, so a full-prompt hit is capped — the capped
+        # block's page is then shared *and* about to be written: the
+        # copy-on-write divergence fork below.  If the pool can't afford a
+        # candidate (the fork needs one extra transient page, and adopted
+        # pages can't be reclaimed for their own request), degrade the hit:
+        # capped -> floored to a page multiple (no fork) -> cold.
+        best = min(len(pages) * ps, plen - 1)
+        candidates = [best]
+        if best % ps:
+            candidates.append(best - best % ps)
+        if candidates[-1] != 0:
+            candidates.append(0)
+        for hit in candidates:
+            shared = pages[: -(-hit // ps)] if hit else []
+            fork_needed = 1 if hit % ps else 0
+            fresh_needed = n_pages - len(shared) + fork_needed
+            reclaimable = max(0, cache.num_reclaimable - len(shared))
+            if cache.num_free + reclaimable < fresh_needed:
+                continue
+            try:
+                cache.allocate(req.rid, n_pages, prefix_pages=tuple(shared))
+            except MemoryError:
+                continue
+            if pc is not None:
+                pc.acquire_note(shared)
+                if fork_needed:
+                    try:
+                        cache.fork_page(req.rid, hit // ps)
+                    except MemoryError:
+                        cache.free(req.rid)
+                        continue
+                    pc.stats.forks += 1
+            req.cache_len = hit
+            if pc is not None:  # both ratio sides counted once, on adoption
+                pc.stats.lookups += 1
+                pc.stats.lookup_tokens += len(hashes) * ps
+                pc.stats.hit_tokens += hit
+            self.stats.prefix_hit_tokens += hit
+            self.stats.prefix_new_tokens += plen - hit
+            return True
+        return False
+
+    # ------------------------------------------------------- chunked prefill
+    def _prefill_pump(self) -> None:
+        """Advance every prefilling request by at most one chunk.  Requests
+        finishing this step are grouped by (w_bits, kv_bits, pow2 bucket of
+        their remaining suffix) into one ragged call each; longer prompts
+        batch into one ``prefill_chunk``-wide ragged call per precision and
+        keep the batch decoding between their chunks."""
+        pumping = [
+            r
+            for r in self._sched.running
+            if r.state is RequestState.RUNNING and self._prefilling(r)
+        ]
+        if not pumping:
+            return
+        pumping.sort(key=lambda r: r.arrival)
+        t0 = time.perf_counter()
+        groups: dict[tuple, list[ServeRequest]] = {}
+        for req in pumping:
+            rem = self._prefill_len(req) - req.cache_len
+            if rem <= self.prefill_chunk:
+                # clamp to the chunk budget: for non-pow2 budgets the pow2
+                # bucket could otherwise exceed the per-step token bound
+                key = (req.w_bits, req.kv_bits,
+                       min(bucket_pow2(rem), self.prefill_chunk))
+            else:  # long runners batch too: one ragged call per precision
+                key = (req.w_bits, req.kv_bits, "long")
+            groups.setdefault(key, []).append(req)
+        for key, reqs in sorted(groups.items(), key=lambda kv: kv[1][0].arrival):
+            chunk = self.prefill_chunk if key[2] == "long" else key[2]
+            self._chunk_group(reqs, chunk)
+        self.stats.prefill_s += time.perf_counter() - t0
+
+    def _chunk_group(self, reqs: list[ServeRequest], chunk: int) -> None:
+        w_bits, kv_bits = reqs[0].w_bits, reqs[0].kv_bits
+        cache = self.cache_for(kv_bits)
+        cfg_g = self._group_cfg(kv_bits)
+        rids = [r.rid for r in reqs]
+        n = len(reqs)
+        # pow2-bucket the batch dimension like decode does: padding rows have
+        # q_len 0, so they scatter nothing and their logits are sliced off
+        bsz = bucket_pow2(n)
+        tokens = np.zeros((bsz, chunk), np.int32)
+        q_start = np.zeros(bsz, np.int32)
+        q_lens = np.zeros(bsz, np.int32)
+        for i, r in enumerate(reqs):
+            feed = r.feed_tokens()
+            q_start[i] = r.cache_len
+            q_lens[i] = min(len(feed) - r.cache_len, chunk)
+            tokens[i, : q_lens[i]] = feed[r.cache_len : r.cache_len + q_lens[i]]
+        width = max(len(cache.table(r)) for r in rids)
+        width = bucket_pow2(width)  # pow2-bucket to limit retraces
+        tables = np.zeros((bsz, width), np.int32)
+        tables[:n] = cache.table_array(rids, width)
+        logits, new_pools = self._chunk_fn(
+            self.params_for(w_bits), jnp.asarray(tokens), jnp.asarray(q_start),
+            jnp.asarray(q_lens), jnp.asarray(tables),
+            cache.k, cache.v, cache.k_scale, cache.v_scale, cfg=cfg_g,
+        )
+        jax.block_until_ready(logits)
+        cache.set_pools(*new_pools)  # chunk K/V scattered in-kernel
+        self.stats.prefill_chunks += 1
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, req in enumerate(reqs):
+            req.cache_len += int(q_lens[i])
+            if not self._prefilling(req):
+                self._on_prefill_done(req, int(first[i]))
+
+    def _on_prefill_done(self, req: ServeRequest, first_token: int) -> None:
+        self.stats.prefills += 1
+        if not req.out_tokens:  # fresh request: prefill yields token #1
+            req.out_tokens.append(first_token)
+            self.stats.tokens_out += 1
+            req.ttft = time.perf_counter() - req.submit_ts
+            self.stats.ttfts.append(req.ttft)
+        # register the prompt's full blocks so followers (and this request's
+        # own readmission) hit them
+        self._register_blocks(req)
+        if len(req.out_tokens) >= req.max_new_tokens:
+            self._finish(req)
+
+    def _register_blocks(self, req: ServeRequest) -> None:
+        pc = self._prefix.get(req.kv_bits)
+        if pc is None or req.cache_len < pc.block:
+            return
+        cache = self.cache_for(req.kv_bits)
+        feed = req.feed_tokens()[: req.cache_len]
+        hashes = self._block_hashes.get(req.rid, [])
+        n_known = len(hashes)
+        n_blocks = len(feed) // pc.block
+        if n_blocks > n_known:  # decode extended the chain past the prompt
+            hashes = block_hashes(feed, pc.block, self._chain_salt(req))
+            self._block_hashes[req.rid] = hashes
+        pc.register(hashes[:n_blocks], cache.table(req.rid)[:n_blocks])
+
+    # --------------------------------------------- legacy prefill (prefix_len)
     def _admit_and_prefill(self) -> list[ServeRequest]:
         reserved: dict[int, int] = {}  # kv_bits -> pages spoken for this round
 
@@ -237,17 +501,13 @@ class ServeEngine:
             else:
                 cache.write_prompt(req.rid, kv["k"][:, i], kv["v"][:, i])
             req.cache_len = plen
-            if not req.out_tokens:  # fresh request: prefill yields token #1
-                req.out_tokens.append(int(first[i]))
-                self.stats.tokens_out += 1
-            self.stats.prefills += 1
-            if len(req.out_tokens) >= req.max_new_tokens:
-                self._finish(req)
+            self._on_prefill_done(req, int(first[i]))
 
     # ---------------------------------------------------------------- decode
     def _ensure_page_room(self) -> None:
         """Grow page tables for requests crossing a page boundary; preempt
-        youngest-first when a pool is dry (oldest requests get pages first)."""
+        youngest-first when a pool is dry (oldest requests get pages first).
+        The allocation path evicts LRU prefix-cache pages before preempting."""
         for req in sorted(self._sched.running, key=lambda r: r.arrival):
             if req.state is not RequestState.RUNNING:
                 continue
@@ -261,20 +521,32 @@ class ServeEngine:
                 if victim is req:
                     break
 
-    def _preempt(self, req: ServeRequest) -> None:
+    def _release_pages(self, req: ServeRequest) -> None:
+        """Register materialized full blocks into the prefix cache, then drop
+        the request's references (retained pages keep serving hits until the
+        pool reclaims them)."""
+        self._register_blocks(req)
         self.cache_for(req.kv_bits).free(req.rid)
+        self._block_hashes.pop(req.rid, None)
+
+    def _preempt(self, req: ServeRequest) -> None:
+        self._release_pages(req)
         self._sched.preempt(req)
         self.stats.preemptions += 1
 
     def _finish(self, req: ServeRequest) -> None:
-        self.cache_for(req.kv_bits).free(req.rid)
+        self._release_pages(req)
         self._sched.finish(req)
         self.finished.append(req)
 
     def _decode_groups(self) -> int:
         groups: dict[tuple[int, int], list[ServeRequest]] = {}
         for req in self._sched.running:
-            if req.state is RequestState.RUNNING and req.out_tokens:
+            if (
+                req.state is RequestState.RUNNING
+                and req.out_tokens
+                and not self._prefilling(req)
+            ):
                 groups.setdefault(req.group_key, []).append(req)
         t0 = time.perf_counter()
         for (w_bits, kv_bits), reqs in sorted(groups.items()):
@@ -284,11 +556,11 @@ class ServeEngine:
             rids = [r.rid for r in reqs]
             positions = np.array([r.cache_len for r in reqs], np.int64)
             width = max(len(cache.table(r)) for r in rids)
-            width = 1 << (width - 1).bit_length()  # pow2-bucket to limit retraces
+            width = bucket_pow2(width)  # pow2-bucket to limit retraces
             # pow2-bucket the batch dimension too, so admitting/retiring one
             # request doesn't retrace the jitted decode step
             n_real = len(reqs)
-            bsz = 1 << (n_real - 1).bit_length()
+            bsz = bucket_pow2(n_real)
             tables = np.zeros((bsz, width), np.int32)
             tables[:n_real] = cache.table_array(rids, width)
             tokens = np.zeros((bsz, 1), np.int32)
@@ -296,12 +568,14 @@ class ServeEngine:
             lengths = np.zeros(bsz, np.int32)
             lengths[:n_real] = positions.astype(np.int32)
             valid = np.arange(bsz) < n_real
+            t_call = time.perf_counter()
             logits, new_pools = self._decode_fn(
                 self.params_for(w_bits), jnp.asarray(tokens),
                 jnp.asarray(lengths), jnp.asarray(tables), jnp.asarray(valid),
                 cache.k, cache.v, cache.k_scale, cache.v_scale, cfg=cfg_g,
             )
             jax.block_until_ready(logits)
+            self.stats.decode_call_s.append(time.perf_counter() - t_call)
             cache.set_pools(*new_pools)  # new tokens scattered in-kernel
             next_tok = np.asarray(jnp.argmax(logits[:n_real], axis=-1))
             for i, req in enumerate(reqs):
@@ -321,11 +595,21 @@ class ServeEngine:
 
     def step(self) -> bool:
         """One engine iteration; returns True if any work was done."""
-        admitted = self._admit_and_prefill()
+        if self._legacy_prefill:
+            admitted = self._admit_and_prefill()
+            worked = bool(admitted)
+        else:
+            admitted = self._sched.admit(self._try_admit)
+            pumping = any(
+                r.state is RequestState.RUNNING and self._prefilling(r)
+                for r in self._sched.running
+            )
+            self._prefill_pump()
+            worked = bool(admitted) or pumping
         self._ensure_page_room()
         n_groups = self._decode_groups()
         self.stats.engine_steps += 1
-        return bool(admitted) or n_groups > 0
+        return worked or n_groups > 0
 
     def run(self) -> list[ServeRequest]:
         """Drive until every submitted request finishes; returns them
@@ -333,7 +617,7 @@ class ServeEngine:
         while self._sched.has_work():
             if not self.step():
                 raise RuntimeError(
-                    "engine stalled: no request can be admitted "
-                    f"(free pages: { {b: c.num_free for b, c in self._caches.items()} })"
+                    "engine stalled: no request can be admitted (free pages: "
+                    f"{ {b: c.num_allocatable for b, c in self._caches.items()} })"
                 )
         return self.finished

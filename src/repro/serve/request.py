@@ -36,6 +36,8 @@ class ServeRequest:
     out_tokens: list[int] = field(default_factory=list)
     cache_len: int = 0  # tokens currently materialized in the KV cache
     preemptions: int = 0
+    submit_ts: float = 0.0  # perf_counter at submit (TTFT reference point)
+    ttft: float | None = None  # submit -> first output token, seconds
 
     @property
     def done(self) -> bool:

@@ -237,7 +237,11 @@ def test_preemption_recovers(setup):
     eng.run()
     assert all(r.done and len(r.out_tokens) == 8 for r in reqs)
     assert eng.stats.preemptions > 0
-    assert eng.cache_for(8).num_free == 4  # every page returned
+    # every page is reclaimable again: free, or retained (refcount 0) by the
+    # prefix cache for future hits
+    cache = eng.cache_for(8)
+    assert cache.num_allocatable == 4
+    assert not cache._tables and not cache._refcount
 
 
 def test_continuous_refill(setup):
