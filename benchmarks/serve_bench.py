@@ -1,15 +1,18 @@
 """Serving-engine latency/throughput sweep: tokens/s, TTFT and per-token
-percentiles vs batch size vs precision mix, plus the shared-system-prompt
-prefix-cache workload (cold vs warm TTFT).
+percentiles vs batch size vs precision mix, the shared-system-prompt
+prefix-cache workload (cold vs warm TTFT), and the speculative-decoding
+workload (spec-on vs spec-off tok/s + draft accept rate).
 
 Continuous-batching numbers for the multi-precision engine on a tiny
 CPU-sized model — the point is the *shape* of the curves (occupancy scaling,
-W4 vs W8 grouping overhead, warm-prefix TTFT collapse), not absolute CPU
-numbers; real-TPU serving throughput comes from the roofline path.
+W4 vs W8 grouping overhead, warm-prefix TTFT collapse, spec-round call
+fusion), not absolute CPU numbers; real-TPU serving throughput comes from
+the roofline path.
 
-Importable: ``rows()`` yields per-configuration dicts, and
-``shared_prefix_stats()`` measures cold vs warm prefix-cache TTFT
-(min-of-N — this box's walltimes swing run to run).
+Importable: ``rows()`` yields per-configuration dicts,
+``shared_prefix_stats()`` measures cold vs warm prefix-cache TTFT, and
+``spec_decode_stats()`` measures spec-on vs spec-off decode throughput
+(all best-of-N — this box's walltimes swing run to run).
 """
 from __future__ import annotations
 
@@ -29,6 +32,17 @@ NEW_TOKENS = 8
 SHARED_PREFIX_LEN = 96
 SHARED_TAIL_LEN = 32
 SHARED_CHUNK = 32
+
+# speculative-decoding workload: synthetic-repetition prompts (a short motif
+# tiled across the prompt) decoded at bf16 with a W8 draft — a high-fidelity
+# draft whose argmax tracks the target's, so acceptance stays high and the
+# round fusion (k drafts + verify in ONE dispatch vs k+1 dispatches) shows
+SPEC_K = 3
+SPEC_W_BITS = 16
+SPEC_DRAFT_BITS = 8
+SPEC_BATCH = 4
+SPEC_PROMPT_LEN = 16
+SPEC_NEW_TOKENS = 32
 
 
 @functools.lru_cache(maxsize=1)
@@ -166,6 +180,70 @@ def shared_prefix_stats(n_iters: int = 5) -> dict:
     }
 
 
+def _spec_iter(prompts, spec_k: int):
+    """One engine pass over the repetition workload; returns (tok/s, accept,
+    out_tokens).  spec_k == 0 is the plain-greedy control."""
+    from repro.serve import ServeEngine
+
+    cfg, params = _setup()
+    page_size = 8
+    pages_per_slot = -(-(SPEC_PROMPT_LEN + SPEC_NEW_TOKENS) // page_size)
+    engine = ServeEngine(
+        cfg, params,
+        max_slots=SPEC_BATCH,
+        num_pages=SPEC_BATCH * pages_per_slot,
+        page_size=page_size,
+        spec_k=spec_k,
+        draft_bits=SPEC_DRAFT_BITS,
+    )
+    # pre-touch lazy setup so decode_s measures decoding, not quantization
+    engine.params_for(SPEC_W_BITS)
+    engine.params_for(SPEC_DRAFT_BITS)
+    engine.cache_for(8)
+    reqs = [
+        engine.submit(p, SPEC_NEW_TOKENS, w_bits=SPEC_W_BITS, kv_bits=8)
+        for p in prompts
+    ]
+    engine.run()
+    s = engine.stats
+    return s.decode_tok_per_s, s.spec_accept_rate, [r.out_tokens for r in reqs]
+
+
+def spec_decode_stats(n_iters: int = 5) -> dict:
+    """Speculative vs plain decode throughput on the synthetic-repetition
+    workload (motif-tiled prompts, bf16 target, W8 draft, spec_k=3).
+
+    Alternates spec-on / spec-off passes and takes best-of-N of each (this
+    box's walltimes swing several-x run to run; min-of-N per the serving
+    bench convention), and asserts nothing itself — run.py --smoke gates
+    spec-on >= spec-off at accept >= 0.9."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    cfg, _ = _setup()
+    motif = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    prompts = [
+        np.tile(motif, SPEC_PROMPT_LEN // len(motif)) for _ in range(SPEC_BATCH)
+    ]
+    _spec_iter(prompts, 0)  # compile warmup (discarded)
+    _spec_iter(prompts, SPEC_K)
+    plain_tps, spec_tps, accept = [], [], 0.0
+    spec_out = plain_out = None
+    for _ in range(n_iters):
+        tps, _, plain_out = _spec_iter(prompts, 0)
+        plain_tps.append(tps)
+        tps, accept, spec_out = _spec_iter(prompts, SPEC_K)
+        spec_tps.append(tps)
+    return {
+        "spec_k": float(SPEC_K),
+        "accept_rate": accept,
+        "plain_tok_per_s": max(plain_tps),
+        "spec_tok_per_s": max(spec_tps),
+        "speedup": max(spec_tps) / max(max(plain_tps), 1e-9),
+        "outputs_match": float(spec_out == plain_out),
+    }
+
+
 HEADER = "name,decode_tok_per_s,ttft_ms_p50,tok_ms_p50,tok_ms_p99,occupancy"
 
 
@@ -182,3 +260,5 @@ if __name__ == "__main__":
     print("\nname,value")
     for k, v in sp.items():
         print(f"shared_prefix_{k},{v:.3f}")
+    for k, v in spec_decode_stats().items():
+        print(f"spec_decode_{k},{v:.3f}")

@@ -158,13 +158,17 @@ def _mpmm_ff_kernel(x_ref, w_ref, o_ref, *, w_bits, x_bits, mode, bk):
             k_len=bk,
         )
     else:
+        # the FF output block IS the cross-K-stage accumulator, so it must
+        # be f32 (out_shape below): accumulating spilled partials in the
+        # bf16 activation dtype loses ~8 mantissa bits per stage and
+        # diverges from the CF path's f32 VMEM accumulator at large K
         x = x_ref[...]
         o_ref[...] += jax.lax.dot_general(
             x,
             w.astype(x.dtype),
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
-        ).astype(o_ref.dtype)
+        )
 
 
 def mpmm_pallas(
@@ -186,6 +190,10 @@ def mpmm_pallas(
     x: [M, K] (int8/int16 in int mode; bf16/f32 in dequant mode)
     w_data: [K, N] int8/int16, or [K//2, N] int8 bit-packed when w_bits == 4
     w_scale: [1, N] f32 per-output-channel scale (fused only in CF+dequant)
+
+    Returns x.dtype for CF dequant (scale fused in-kernel), f32 for FF
+    dequant (unscaled cross-stage accumulator — the wrapper applies the
+    scale in f32 and casts), int32 for int mode.
     """
     m_sz, k_sz = x.shape
     n_sz = w_data.shape[-1]
@@ -226,7 +234,9 @@ def mpmm_pallas(
             return out  # scale applied by the wrapper (kept integer-pure)
         return out
 
-    # FF: k outermost, output revisited (partial sums spill to the out block)
+    # FF: k outermost, output revisited (partial sums spill to the out block).
+    # Dequant-mode partials spill at f32 — the caller applies the scale in
+    # f32 and casts down, mirroring the CF kernel's f32 VMEM accumulator.
     grid = (n_k, m_sz // bm, n_sz // bn)
     kernel = functools.partial(
         _mpmm_ff_kernel, w_bits=w_bits, x_bits=x_bits, mode=mode, bk=bk
@@ -239,7 +249,7 @@ def mpmm_pallas(
             pl.BlockSpec((bk // kpack, bn), lambda k, m, n: (k, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda k, m, n: (m, n)),
-        out_shape=jax.ShapeDtypeStruct((m_sz, n_sz), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((m_sz, n_sz), acc_dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "parallel", "parallel")
         ),

@@ -34,6 +34,7 @@ __all__ = [
     "mqa_decode",
     "paged_mqa_decode",
     "paged_mqa_prefill",
+    "paged_mqa_verify",
 ]
 
 _INT_DTYPE = {4: jnp.int8, 8: jnp.int8, 16: jnp.int16}
@@ -152,7 +153,10 @@ def mpmm(
     if mode == "int":
         out = out.astype(jnp.float32) * w_scale.astype(jnp.float32)
     elif dataflow == "ff":
-        out = (out * w_scale.astype(out.dtype)).astype(x.dtype)
+        # FF dequant partials arrive as f32 (the kernel's cross-stage
+        # accumulator); apply the scale in f32 like the CF kernel does
+        # in-VMEM, then cast once to the activation dtype
+        out = (out * w_scale.astype(jnp.float32)).astype(x.dtype)
     return out.reshape(*lead, n_sz)
 
 
@@ -396,3 +400,19 @@ def paged_mqa_prefill(
             interpret=interpret,
         )
     return out.transpose(0, 2, 1, 3, 4).reshape(b, c, h, d)
+
+
+def paged_mqa_verify(*args, **kwargs) -> jnp.ndarray:
+    """Multi-token verify attention for speculative decoding.
+
+    A speculative verify window *is* a causal self-chunk: the window's C
+    tokens (the last emitted token + the draft tokens) sit at absolute
+    positions ``ctx_lens[b] + c``, attend to every pooled token before the
+    window through the page tables, and to each other under the
+    causal-within-chunk mask — exactly the :func:`paged_mqa_prefill`
+    contract, so no new attention kernel is needed.  The caller scatters the
+    window's target-precision K/V into its pages (overwriting the draft
+    passes' K/V) and rolls rejected tail positions back host-side via
+    ``cache_len`` truncation, so nothing stale is ever attended.
+    """
+    return paged_mqa_prefill(*args, **kwargs)

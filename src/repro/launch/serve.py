@@ -13,6 +13,12 @@ the first request prefills it cold, every follower adopts the cached prefix
 pages and prefills only its unique tail (see the prefix_* stats in the
 output).  ``--prefill-chunk`` bounds per-step prefill work so long prompts
 interleave with running decodes; ``--no-prefix-cache`` disables reuse.
+``--spec-k K`` turns on self-speculative decoding: every request drafts up
+to K greedy tokens per round with the cheap ``--draft-bits`` weight set and
+verifies them in one pass at its own precision (exact acceptance — output
+tokens are identical to plain decode; see spec_* stats).  ``--eos-id``
+terminates a request the moment it emits that token instead of always
+burning the full ``--new-tokens`` budget.
 """
 from __future__ import annotations
 
@@ -49,6 +55,18 @@ def main() -> None:
         help="max prompt tokens prefilled per engine step (chunked prefill)",
     )
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument(
+        "--spec-k", type=int, default=0, metavar="K",
+        help="speculative draft tokens per round (0 = plain greedy decode)",
+    )
+    ap.add_argument(
+        "--draft-bits", type=int, default=4, choices=(4, 8, 16),
+        help="weight precision of the speculative draft passes",
+    )
+    ap.add_argument(
+        "--eos-id", type=int, default=None,
+        help="stop token id: requests finish on emitting it (default: none)",
+    )
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -115,12 +133,15 @@ def main() -> None:
         page_size=args.page_size,
         prefill_chunk=args.prefill_chunk,
         enable_prefix_cache=not args.no_prefix_cache,
+        spec_k=args.spec_k,
+        draft_bits=args.draft_bits,
     )
     reqs = [
         engine.submit(
             prompt(), args.new_tokens,
             w_bits=mix[i % len(mix)],
             kv_bits=kv_bits,
+            eos_id=args.eos_id,
         )
         for i in range(args.requests)
     ]
@@ -146,6 +167,9 @@ def main() -> None:
         "mixed_precision_steps": stats.mixed_precision_steps,
         "mean_batch_occupancy": round(stats.mean_batch_occupancy, 2),
         "preemptions": stats.preemptions,
+        "spec_k": args.spec_k,
+        "spec_rounds": stats.spec_rounds,
+        "spec_accept_rate": round(stats.spec_accept_rate, 3),
         "sample_output": reqs[0].out_tokens[:8],
     }, indent=1))
 

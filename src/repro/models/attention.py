@@ -236,3 +236,13 @@ def paged_prefill_attention(
         kv_bits=kv_bits,
         window=window,
     )
+
+
+def paged_verify_attention(*args, **kwargs) -> jnp.ndarray:
+    """Speculative-verify attention: a verify window (the last emitted
+    token + the draft tokens, ``q_lens = n_draft + 1``) *is* a causal
+    self-chunk, so this is :func:`paged_prefill_attention` under a second
+    name — the verify entry point stays visible in profiles and docs
+    (``kernels/ops.py::paged_mqa_verify`` documents the kernel-level
+    contract) without duplicating the 15-parameter plumbing."""
+    return paged_prefill_attention(*args, **kwargs)

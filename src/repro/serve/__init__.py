@@ -22,6 +22,9 @@ Layers (bottom-up):
   * prefill.py      — jit'd chunked-prefill step (cached prefixes skipped,
     ragged pow2-bucketed suffix chunks, interleaved with decode).
   * decode.py       — jit'd ragged batched decode step over the page pool.
+  * spec_decode.py  — fused self-speculative round: k greedy draft steps at
+    a cheap weight precision + one exact multi-token verify at the
+    request's target precision (bit-identical to plain greedy decode).
   * engine.py       — ``ServeEngine`` tying it together; ``EngineStats``.
 
 Entry points: ``repro.launch.serve`` (CLI), ``repro.train.server.Server``

@@ -37,7 +37,20 @@ One engine step:
      adopts the returned pools.  Batch and table-width dimensions are
      pow2-bucketed so admitting/retiring one request doesn't retrace.  A
      step that decodes ≥2 different precision groups is counted in
-     ``stats.mixed_precision_steps``.
+     ``stats.mixed_precision_steps``.  Requests with ``spec_k > 0`` instead
+     run **speculative rounds** (serve/spec_decode.py): one fused jitted
+     call drafts up to ``spec_k`` greedy tokens at the request's cheap
+     ``draft_bits`` weight set and verifies the window at its target
+     ``w_bits`` through the chunk-attention kernel; exact greedy acceptance
+     emits 1..spec_k+1 tokens per round (bit-identical to plain decode),
+     and rejected tail pages roll back to the pool via
+     ``PagedKVCache.truncate``.
+
+A request finishes on its token budget OR the moment it emits its
+``eos_id``/``stop_tokens`` (prefill, plain decode, and mid-verify-window
+alike).  A request whose context (prompt + max_new_tokens) could never fit
+its page pool is FAILED at submit/admission with a clear error instead of
+being allowed to preempt-readmit-livelock the engine.
 
 Requests never wait for batch-mates: a request admitted at step N starts
 prefilling at step N alongside requests decoding since long before.
@@ -66,33 +79,51 @@ from repro.serve.prefill import bucket_pow2, chunk_prefill_step
 from repro.serve.prefix_cache import PrefixCache, block_hashes
 from repro.serve.request import RequestState, ServeRequest
 from repro.serve.scheduler import Scheduler
+from repro.serve.spec_decode import clip_stop, plan_windows, spec_decode_round
 
 _SUPPORTED_FAMILIES = ("dense", "vlm", "audio", "moe")
 
 
-@functools.lru_cache(maxsize=1)
-def _shared_jits():
-    """Jitted engine steps for the mesh=None case, shared process-wide so a
-    fresh engine reuses compiled code (mesh objects aren't hashable jit
-    statics, so meshed engines keep per-engine closures)."""
+def _make_jits(mesh):
+    """Jitted engine steps closed over ``mesh`` (mesh objects aren't
+    hashable jit statics, so it rides in the closure).  The four pool
+    arguments of decode/chunk/spec are donated so their in-kernel K/V
+    scatters run in place — keep ``donate_argnums`` in sync with the lambda
+    signatures here, the single place they are spelled."""
     prefill = functools.partial(jax.jit, static_argnames=("cfg", "max_len"))(
-        lambda p, b, cfg, max_len: model_lib.prefill(p, b, cfg, max_len, None)
+        lambda p, b, cfg, max_len: model_lib.prefill(p, b, cfg, max_len, mesh)
     )
     decode = functools.partial(
         jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
     )(
         lambda p, t, ln, tb, vl, pk, pv, pks, pvs, cfg: paged_decode_step(
-            p, t, ln, tb, vl, pk, pv, pks, pvs, cfg=cfg, mesh=None
+            p, t, ln, tb, vl, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
         )
     )
     chunk = functools.partial(
         jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
     )(
         lambda p, t, qs, ql, tb, pk, pv, pks, pvs, cfg: chunk_prefill_step(
-            p, t, qs, ql, tb, pk, pv, pks, pvs, cfg=cfg, mesh=None
+            p, t, qs, ql, tb, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
         )
     )
-    return prefill, decode, chunk
+    spec = functools.partial(
+        jax.jit, static_argnames=("cfg", "spec_k"), donate_argnums=(7, 8, 9, 10)
+    )(
+        lambda dp, p, t, ln, tb, vl, nd, pk, pv, pks, pvs, cfg, spec_k:
+        spec_decode_round(
+            dp, p, t, ln, tb, vl, nd, pk, pv, pks, pvs,
+            cfg=cfg, spec_k=spec_k, mesh=mesh,
+        )
+    )
+    return prefill, decode, chunk, spec
+
+
+@functools.lru_cache(maxsize=1)
+def _shared_jits():
+    """The mesh=None jits, shared process-wide so a fresh engine reuses
+    compiled code; meshed engines keep per-engine closures."""
+    return _make_jits(None)
 
 
 @dataclass
@@ -107,6 +138,10 @@ class EngineStats:
     preemptions: int = 0
     mixed_precision_steps: int = 0  # engine steps decoding >= 2 precision groups
     occupancy_sum: int = 0  # sum of decode group sizes (mean = /decode_steps)
+    spec_rounds: int = 0  # fused draft+verify group calls
+    spec_draft_tokens: int = 0  # tokens drafted at draft_bits
+    spec_accepted_tokens: int = 0  # drafts the target verify accepted
+    failed: int = 0  # requests rejected at admission (context can't fit)
     group_calls: dict = field(default_factory=dict)  # (w_bits, kv_bits) -> calls
     prefix_hit_tokens: int = 0  # prompt tokens served from cached pages
     prefix_new_tokens: int = 0  # prompt tokens actually computed
@@ -126,6 +161,11 @@ class EngineStats:
     @property
     def decode_tok_per_s(self) -> float:
         return self.tokens_out / max(self.decode_s, 1e-9)
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Fraction of drafted tokens the target-precision verify accepted."""
+        return self.spec_accepted_tokens / max(self.spec_draft_tokens, 1)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -156,6 +196,8 @@ class ServeEngine:
         page_size: int = 16,
         prefill_chunk: int = 32,
         enable_prefix_cache: bool = True,
+        spec_k: int = 0,
+        draft_bits: int = 4,
         mesh=None,
     ):
         if not self.supports(cfg):
@@ -168,6 +210,12 @@ class ServeEngine:
             )
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if draft_bits not in (4, 8, 16):
+            raise ValueError(f"draft_bits must be 4, 8 or 16, got {draft_bits}")
+        self.spec_k = spec_k  # submit() default: 0 = plain greedy decode
+        self.draft_bits = draft_bits  # submit() default draft precision
         self.cfg = cfg
         self.mesh = mesh
         self.page_size = page_size
@@ -189,26 +237,8 @@ class ServeEngine:
         # place (None scales in the kv16 case contribute no buffers); the
         # engine rebinds via cache.set_pools right after each call and never
         # reuses the old arrays, so the donated buffers are safely dead.
-        if mesh is None:
-            self._prefill_fn, self._decode_fn, self._chunk_fn = _shared_jits()
-        else:
-            self._prefill_fn = functools.partial(
-                jax.jit, static_argnames=("cfg", "max_len")
-            )(lambda p, b, cfg, max_len: model_lib.prefill(p, b, cfg, max_len, mesh))
-            self._decode_fn = functools.partial(
-                jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
-            )(
-                lambda p, t, ln, tb, vl, pk, pv, pks, pvs, cfg: paged_decode_step(
-                    p, t, ln, tb, vl, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
-                )
-            )
-            self._chunk_fn = functools.partial(
-                jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
-            )(
-                lambda p, t, qs, ql, tb, pk, pv, pks, pvs, cfg: chunk_prefill_step(
-                    p, t, qs, ql, tb, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
-                )
-            )
+        (self._prefill_fn, self._decode_fn, self._chunk_fn,
+         self._spec_fn) = _shared_jits() if mesh is None else _make_jits(mesh)
         self.stats = EngineStats()
 
     # -------------------------------------------------------------- plumbing
@@ -240,7 +270,12 @@ class ServeEngine:
         return self.cfg.prefix_len + len(req.feed_tokens())
 
     def _max_ctx(self, req: ServeRequest) -> int:
-        return self.cfg.prefix_len + len(req.prompt) + req.max_new_tokens
+        """Largest cache the request can ever need: every position its feed
+        chain can reach.  The final emitted token is never fed back (the
+        request finishes on emission), so the worst-case cache is one short
+        of prompt + max_new_tokens — a request sized exactly to the pool
+        must admit, not be rejected."""
+        return self.cfg.prefix_len + len(req.prompt) + req.max_new_tokens - 1
 
     def _prefilling(self, req: ServeRequest) -> bool:
         return req.cache_len < self._prefill_len(req)
@@ -258,14 +293,24 @@ class ServeEngine:
         *,
         w_bits: Optional[int] = None,
         kv_bits: Optional[int] = None,
+        eos_id: Optional[int] = None,
+        stop_tokens: tuple[int, ...] = (),
+        spec_k: Optional[int] = None,
+        draft_bits: Optional[int] = None,
         rid: Optional[int] = None,
     ) -> ServeRequest:
         w_bits = self.cfg.serve_w_bits if w_bits is None else w_bits
         kv_bits = self.cfg.serve_kv_bits if kv_bits is None else kv_bits
+        spec_k = self.spec_k if spec_k is None else spec_k
+        draft_bits = self.draft_bits if draft_bits is None else draft_bits
         if w_bits not in (4, 8, 16):
             raise ValueError(f"w_bits must be 4, 8 or 16, got {w_bits}")
         if kv_bits not in (4, 8, 16):
             raise ValueError(f"kv_bits must be 4, 8 or 16, got {kv_bits}")
+        if draft_bits not in (4, 8, 16):
+            raise ValueError(f"draft_bits must be 4, 8 or 16, got {draft_bits}")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         if rid is not None:
@@ -280,6 +325,10 @@ class ServeEngine:
             max_new_tokens=max_new_tokens,
             w_bits=w_bits,
             kv_bits=kv_bits,
+            eos_id=eos_id,
+            stop_tokens=tuple(int(t) for t in stop_tokens),
+            spec_k=spec_k,
+            draft_bits=draft_bits,
             arrival=self._next_arrival,
             submit_ts=time.perf_counter(),
         )
@@ -288,17 +337,49 @@ class ServeEngine:
         cache = self.cache_for(kv_bits)
         if cache.pages_for(self._max_ctx(req)) > cache.num_pages:
             raise ValueError(
-                f"request needs {cache.pages_for(self._max_ctx(req))} pages; "
+                f"request can never fit: prompt + max_new_tokens needs "
+                f"{cache.pages_for(self._max_ctx(req))} pages; the kv{kv_bits} "
                 f"pool only has {cache.num_pages}"
             )
         self._sched.submit(req)
         return req
 
     # ------------------------------------------------- admission (prefix-aware)
+    def _fail(self, req: ServeRequest, msg: str) -> None:
+        """Reject a request that can never run (e.g. its worst-case context
+        exceeds the whole page pool): surface a clear error instead of the
+        admit -> grow -> self-preempt -> readmit livelock, which ``run()``
+        would count as progress forever."""
+        if req in self._sched.waiting:
+            self._sched.waiting.remove(req)
+        req.state = RequestState.FAILED
+        req.error = msg
+        self._block_hashes.pop(req.rid, None)
+        self.stats.failed += 1
+        self.finished.append(req)
+
+    def _admissible(self, req: ServeRequest) -> bool:
+        """Cap admissible context against pool capacity: ``submit`` already
+        rejects oversized requests, but admission re-checks so a request
+        enqueued behind the engine's back (or replayed against a smaller
+        pool) fails loudly here instead of livelocking the decode loop."""
+        cache = self.cache_for(req.kv_bits)
+        need = cache.pages_for(self._max_ctx(req))
+        if need <= cache.num_pages:
+            return True
+        self._fail(
+            req,
+            f"context can never fit: prompt + max_new_tokens needs {need} "
+            f"pages; the kv{req.kv_bits} pool only has {cache.num_pages}",
+        )
+        return False
+
     def _try_admit(self, req: ServeRequest) -> bool:
         """Admission check with commitment: on True the request holds its
         full-prompt page table — cached prefix blocks adopted shared, the
         divergence page CoW-forked, fresh pages for the uncached suffix."""
+        if not self._admissible(req):
+            return False
         cache = self.cache_for(req.kv_bits)
         ps = cache.page_size
         plen = self._prefill_len(req)
@@ -436,7 +517,9 @@ class ServeEngine:
         # register the prompt's full blocks so followers (and this request's
         # own readmission) hit them
         self._register_blocks(req)
-        if len(req.out_tokens) >= req.max_new_tokens:
+        if len(req.out_tokens) >= req.max_new_tokens or req.is_stop(
+            req.out_tokens[-1]
+        ):
             self._finish(req)
 
     def _register_blocks(self, req: ServeRequest) -> None:
@@ -458,6 +541,8 @@ class ServeEngine:
         reserved: dict[int, int] = {}  # kv_bits -> pages spoken for this round
 
         def fits(req: ServeRequest) -> bool:
+            if not self._admissible(req):
+                return False
             cache = self.cache_for(req.kv_bits)
             need = cache.pages_for(self._prefill_len(req))
             if cache.num_free - reserved.get(req.kv_bits, 0) < need:
@@ -504,17 +589,33 @@ class ServeEngine:
             self._on_prefill_done(req, int(first[i]))
 
     # ---------------------------------------------------------------- decode
+    def _step_need(self, req: ServeRequest) -> int:
+        """Cache positions this step may write for ``req``: the speculative
+        window (drafts + the verify's bonus slot) for spec requests, one
+        token otherwise."""
+        if req.spec_k and req.out_tokens and not self._prefilling(req):
+            remaining = req.max_new_tokens - len(req.out_tokens)
+            return min(req.spec_k, max(remaining - 1, 0)) + 1
+        return 1
+
     def _ensure_page_room(self) -> None:
         """Grow page tables for requests crossing a page boundary; preempt
         youngest-first when a pool is dry (oldest requests get pages first).
-        The allocation path evicts LRU prefix-cache pages before preempting."""
+        The allocation path evicts LRU prefix-cache pages before preempting.
+        Speculative requests ask for their whole verify window up front but
+        *degrade to a plain-decode window* under pressure rather than evict
+        anyone — speculation must never cost a batch-mate its pages."""
         for req in sorted(self._sched.running, key=lambda r: r.arrival):
             if req.state is not RequestState.RUNNING:
                 continue
             cache = self.cache_for(req.kv_bits)
-            while req.cache_len >= cache.capacity_tokens(req.rid):
+            need = self._step_need(req)
+            while req.cache_len + need > cache.capacity_tokens(req.rid):
                 if cache.can_allocate(1):
                     cache.extend(req.rid, 1)
+                    continue
+                if need > 1:
+                    need = 1  # shrink the speculative window, keep decoding
                     continue
                 victim = self._sched.pick_victim(kv_bits=req.kv_bits)
                 self._preempt(victim)
@@ -539,62 +640,164 @@ class ServeEngine:
         self._sched.finish(req)
         self.finished.append(req)
 
+    def _batch_arrays(self, cache: PagedKVCache, reqs: list[ServeRequest]):
+        """pow2-bucketed (tokens, lengths, tables, valid) for a decode or
+        spec group — padding rows are masked so they never touch the pool."""
+        rids = [r.rid for r in reqs]
+        width = max(len(cache.table(r)) for r in rids)
+        width = bucket_pow2(width)  # pow2-bucket to limit retraces
+        n_real = len(reqs)
+        bsz = bucket_pow2(n_real)
+        tables = np.zeros((bsz, width), np.int32)
+        tables[:n_real] = cache.table_array(rids, width)
+        tokens = np.zeros((bsz, 1), np.int32)
+        tokens[:n_real] = np.array([[r.out_tokens[-1]] for r in reqs], np.int32)
+        lengths = np.zeros(bsz, np.int32)
+        lengths[:n_real] = np.array([r.cache_len for r in reqs], np.int32)
+        valid = np.arange(bsz) < n_real
+        return tokens, lengths, tables, valid
+
     def _decode_groups(self) -> int:
-        groups: dict[tuple[int, int], list[ServeRequest]] = {}
+        """One batched call per precision group: ``(w_bits, kv_bits)`` plain
+        decode groups emit one token per request;
+        ``(w_bits, draft_bits, kv_bits)`` speculative groups run one fused
+        draft+verify round each (serve/spec_decode.py) and emit 1..spec_k+1
+        tokens per request."""
+        plain: dict[tuple[int, int], list[ServeRequest]] = {}
+        spec: dict[tuple[int, int, int], list[ServeRequest]] = {}
         for req in self._sched.running:
             if (
                 req.state is RequestState.RUNNING
                 and req.out_tokens
                 and not self._prefilling(req)
             ):
-                groups.setdefault(req.group_key, []).append(req)
+                if req.spec_k > 0:
+                    spec.setdefault(req.spec_group_key, []).append(req)
+                else:
+                    plain.setdefault(req.group_key, []).append(req)
         t0 = time.perf_counter()
-        for (w_bits, kv_bits), reqs in sorted(groups.items()):
-            reqs.sort(key=lambda r: r.arrival)
-            cache = self.cache_for(kv_bits)
-            cfg_g = self._group_cfg(kv_bits)
-            rids = [r.rid for r in reqs]
-            positions = np.array([r.cache_len for r in reqs], np.int64)
-            width = max(len(cache.table(r)) for r in rids)
-            width = bucket_pow2(width)  # pow2-bucket to limit retraces
-            # pow2-bucket the batch dimension too, so admitting/retiring one
-            # request doesn't retrace the jitted decode step
-            n_real = len(reqs)
-            bsz = bucket_pow2(n_real)
-            tables = np.zeros((bsz, width), np.int32)
-            tables[:n_real] = cache.table_array(rids, width)
-            tokens = np.zeros((bsz, 1), np.int32)
-            tokens[:n_real] = np.array([[r.out_tokens[-1]] for r in reqs], np.int32)
-            lengths = np.zeros(bsz, np.int32)
-            lengths[:n_real] = positions.astype(np.int32)
-            valid = np.arange(bsz) < n_real
-            t_call = time.perf_counter()
-            logits, new_pools = self._decode_fn(
-                self.params_for(w_bits), jnp.asarray(tokens),
-                jnp.asarray(lengths), jnp.asarray(tables), jnp.asarray(valid),
-                cache.k, cache.v, cache.k_scale, cache.v_scale, cfg=cfg_g,
-            )
-            jax.block_until_ready(logits)
-            self.stats.decode_call_s.append(time.perf_counter() - t_call)
-            cache.set_pools(*new_pools)  # new tokens scattered in-kernel
-            next_tok = np.asarray(jnp.argmax(logits[:n_real], axis=-1))
-            for i, req in enumerate(reqs):
-                req.cache_len += 1
-                req.out_tokens.append(int(next_tok[i]))
-                self.stats.tokens_out += 1
-                if len(req.out_tokens) >= req.max_new_tokens:
-                    self._finish(req)
-            self.stats.decode_steps += 1
-            self.stats.occupancy_sum += len(reqs)
-            key = (w_bits, kv_bits)
-            self.stats.group_calls[key] = self.stats.group_calls.get(key, 0) + 1
+        for (w_bits, kv_bits), reqs in sorted(plain.items()):
+            self._plain_decode_group(reqs, w_bits, kv_bits)
+        for (w_bits, draft_bits, kv_bits), reqs in sorted(spec.items()):
+            self._spec_decode_group(reqs, w_bits, draft_bits, kv_bits)
         self.stats.decode_s += time.perf_counter() - t0
-        if len(groups) >= 2:
+        n_groups = len(plain) + len(spec)
+        if n_groups >= 2:
             self.stats.mixed_precision_steps += 1
-        return len(groups)
+        return n_groups
+
+    def _plain_decode_group(
+        self, reqs: list[ServeRequest], w_bits: int, kv_bits: int
+    ) -> None:
+        reqs.sort(key=lambda r: r.arrival)
+        cache = self.cache_for(kv_bits)
+        cfg_g = self._group_cfg(kv_bits)
+        n_real = len(reqs)
+        tokens, lengths, tables, valid = self._batch_arrays(cache, reqs)
+        t_call = time.perf_counter()
+        logits, new_pools = self._decode_fn(
+            self.params_for(w_bits), jnp.asarray(tokens),
+            jnp.asarray(lengths), jnp.asarray(tables), jnp.asarray(valid),
+            cache.k, cache.v, cache.k_scale, cache.v_scale, cfg=cfg_g,
+        )
+        jax.block_until_ready(logits)
+        self.stats.decode_call_s.append(time.perf_counter() - t_call)
+        cache.set_pools(*new_pools)  # new tokens scattered in-kernel
+        next_tok = np.asarray(jnp.argmax(logits[:n_real], axis=-1))
+        for i, req in enumerate(reqs):
+            req.cache_len += 1
+            tok = int(next_tok[i])
+            req.out_tokens.append(tok)
+            self.stats.tokens_out += 1
+            if req.is_stop(tok) or len(req.out_tokens) >= req.max_new_tokens:
+                self._finish(req)
+        self.stats.decode_steps += 1
+        self.stats.occupancy_sum += len(reqs)
+        key = (w_bits, kv_bits)
+        self.stats.group_calls[key] = self.stats.group_calls.get(key, 0) + 1
+
+    def _spec_decode_group(
+        self, reqs: list[ServeRequest], w_bits: int, draft_bits: int,
+        kv_bits: int,
+    ) -> None:
+        """One fused speculative round for a same-precision group: draft
+        ``spec_k`` tokens at ``draft_bits``, verify the window at ``w_bits``,
+        emit the exactly-accepted prefix + the verify's bonus token, then
+        roll rejected tail pages back to the pool."""
+        reqs.sort(key=lambda r: r.arrival)
+        cache = self.cache_for(kv_bits)
+        cfg_g = self._group_cfg(kv_bits)
+        spec_k = max(r.spec_k for r in reqs)
+        capacities = np.array(
+            [cache.capacity_tokens(r.rid) for r in reqs], np.int64
+        )
+        n_draft = plan_windows(reqs, capacities, spec_k)
+        if not n_draft.any():
+            # every row's window degenerated to one token (final-token
+            # budget or page pressure): a plain decode call does the same
+            # job without spec_k masked-out draft passes + a verify chunk
+            self._plain_decode_group(reqs, w_bits, kv_bits)
+            return
+        n_real = len(reqs)
+        tokens, lengths, tables, valid = self._batch_arrays(cache, reqs)
+        nd = np.zeros(len(valid), np.int32)
+        nd[:n_real] = n_draft
+        t_call = time.perf_counter()
+        tgt, accept, new_pools = self._spec_fn(
+            self.params_for(draft_bits), self.params_for(w_bits),
+            jnp.asarray(tokens), jnp.asarray(lengths), jnp.asarray(tables),
+            jnp.asarray(valid), jnp.asarray(nd),
+            cache.k, cache.v, cache.k_scale, cache.v_scale,
+            cfg=cfg_g, spec_k=spec_k,
+        )
+        jax.block_until_ready(tgt)
+        self.stats.decode_call_s.append(time.perf_counter() - t_call)
+        cache.set_pools(*new_pools)  # draft K/V overwritten by verify K/V
+        tgt_np = np.asarray(tgt)
+        accept_np = np.asarray(accept)
+        for i, req in enumerate(reqs):
+            n_acc = int(accept_np[i])
+            emitted = [int(t) for t in tgt_np[i, : n_acc + 1]]
+            emitted, stopped = clip_stop(req, emitted)
+            req.out_tokens.extend(emitted)
+            req.cache_len += len(emitted)
+            self.stats.tokens_out += len(emitted)
+            self.stats.spec_draft_tokens += int(n_draft[i])
+            # count only accepted drafts the request actually used: a
+            # mid-window stop token discards the accepted tail, and an
+            # accept rate the emission didn't cash in would overstate the
+            # CI-gated metric on eos-heavy workloads
+            self.stats.spec_accepted_tokens += min(len(emitted) - 1, n_acc)
+            # rollback: drop pages holding only rejected-window positions
+            self._truncate_tail(req)
+            if stopped or len(req.out_tokens) >= req.max_new_tokens:
+                self._finish(req)
+        self.stats.spec_rounds += 1
+        self.stats.decode_steps += 1
+        self.stats.occupancy_sum += len(reqs)
+        key = (w_bits, kv_bits)
+        self.stats.group_calls[key] = self.stats.group_calls.get(key, 0) + 1
+
+    def _truncate_tail(self, req: ServeRequest) -> None:
+        """Return table pages past ``req.cache_len`` to the pool.  Any
+        prefix-cache entry for a dropped page is forgotten first: the verify
+        window may have overwritten the page with rejected-token K/V, so it
+        must not keep serving hits (registered blocks always precede the
+        round's window, so in practice only defensively)."""
+        cache = self.cache_for(req.kv_bits)
+        keep = cache.pages_for(req.cache_len)
+        tail = cache.table(req.rid)[keep:]
+        if not tail:
+            return
+        pc = self._prefix.get(req.kv_bits)
+        if pc is not None:
+            pc.forget_pages(tail)
+        cache.truncate(req.rid, req.cache_len)
 
     def step(self) -> bool:
-        """One engine iteration; returns True if any work was done."""
+        """One engine iteration; returns True if any work was done (failing
+        an inadmissible request counts — it empties the queue)."""
+        failed_before = self.stats.failed
         if self._legacy_prefill:
             admitted = self._admit_and_prefill()
             worked = bool(admitted)
@@ -609,11 +812,12 @@ class ServeEngine:
         self._ensure_page_room()
         n_groups = self._decode_groups()
         self.stats.engine_steps += 1
-        return worked or n_groups > 0
+        return worked or n_groups > 0 or self.stats.failed > failed_before
 
     def run(self) -> list[ServeRequest]:
-        """Drive until every submitted request finishes; returns them
-        (completion order)."""
+        """Drive until every submitted request finishes or fails; returns
+        them (completion order — check ``req.failed``/``req.error`` for
+        requests rejected at admission)."""
         while self._sched.has_work():
             if not self.step():
                 raise RuntimeError(

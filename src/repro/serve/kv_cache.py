@@ -165,6 +165,15 @@ class PagedKVCache:
         self._note_usage()
         return pages
 
+    def release_retained(self, page: int) -> None:
+        """Return a cache-retained page (refcount 0, held out of the free
+        list by the release hook) to the free list — the cache layer calls
+        this when it drops such a page's entry and nothing else will ever
+        free it."""
+        if self.refcount(page) != 0:
+            raise ValueError(f"page {page} is still referenced")
+        self._free.append(page)
+
     def incref(self, page: int) -> None:
         """Add a reference to a live or cache-retained page.  Retained pages
         (refcount 0, held out of the free list by the release hook) revive to
@@ -189,6 +198,29 @@ class PagedKVCache:
     def free(self, rid: int) -> None:
         for page in reversed(self._tables.pop(rid)):
             self.decref(page)
+
+    def truncate(self, rid: int, n_tokens: int) -> list[int]:
+        """Shrink rid's table to the pages covering its first ``n_tokens``
+        positions, dropping the reference to every tail page (speculative
+        rollback: rejected draft tokens may have grown the table past the
+        accepted length).  Returns the dropped page ids — shared pages only
+        lose this request's reference; a dropped page whose last reference
+        this was goes through the normal release hook (so the caller must
+        ``PrefixCache.forget_pages`` any page whose *content* the rollback
+        invalidated BEFORE truncating, or the cache would retain it)."""
+        if n_tokens < 0:
+            raise ValueError(f"n_tokens must be >= 0, got {n_tokens}")
+        table = self._tables[rid]
+        keep = self.pages_for(n_tokens)
+        if keep >= len(table):
+            return []
+        dropped = table[keep:]
+        # replace rather than mutate: allocate()/extend() hand out the live
+        # table list, so callers may still hold an alias of the old one
+        self._tables[rid] = table[:keep]
+        for page in reversed(dropped):
+            self.decref(page)
+        return dropped
 
     def fork_page(self, rid: int, idx: int) -> int:
         """Copy-on-write: replace slot ``idx`` of rid's table with a private

@@ -40,7 +40,7 @@ def bucket_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
-def chunk_prefill_step(
+def chunk_forward(
     params,
     tokens: jnp.ndarray,  # [B, C] int32 — this chunk's tokens (tail-padded)
     q_start: jnp.ndarray,  # [B] int32 — tokens already materialized per row
@@ -53,11 +53,21 @@ def chunk_prefill_step(
     *,
     cfg: ArchConfig,
     mesh=None,
+    verify: bool = False,
 ):
-    """Returns (logits [B, V] at each row's last valid chunk position,
-    new_pools) with the chunk's K/V already scattered into its pages —
-    (k, v, k_scale, v_scale), scales None when kv_bits == 16.  The caller
-    adopts the returned pools (donation makes the scatter in-place).
+    """Run one causal self-chunk through the model: returns (final-normed
+    hidden states [B, C, D], new_pools) with the chunk's K/V already
+    scattered into its pages — (k, v, k_scale, v_scale), scales None when
+    kv_bits == 16.  The caller adopts the returned pools (donation makes the
+    scatter in-place).
+
+    This is the shared forward of both chunked prefill
+    (:func:`chunk_prefill_step`, which only needs the last valid position's
+    logits) and speculative verify (serve/spec_decode.py, which needs every
+    window position's logits) — a verify window *is* a causal self-chunk.
+    ``verify`` picks the attention entry point
+    (``paged_verify_attention`` vs ``paged_prefill_attention``; identical
+    kernel contract, separate dispatch for profiling/stats).
 
     Preconditions: every row's table covers positions ``[0, q_start + q_len)``
     (the engine allocates the full prompt's pages at admission, forking any
@@ -65,6 +75,10 @@ def chunk_prefill_step(
     already materialized in the pool.  Padding positions (``i >= q_lens[b]``)
     never scatter.  Not jit'd here: the engine jits a closure over its mesh,
     mirroring decode."""
+    attn_fn = (
+        attn_mod.paged_verify_attention if verify
+        else attn_mod.paged_prefill_attention
+    )
     quant = cfg.serve_kv_bits < 16
     b, c = tokens.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -92,7 +106,7 @@ def chunk_prefill_step(
         if quant:
             kq, ksc = model_lib._quantize_token_kv(k, cfg.serve_kv_bits)
             vq, vsc = model_lib._quantize_token_kv(v, cfg.serve_kv_bits)
-            o = attn_mod.paged_prefill_attention(
+            o = attn_fn(
                 q, pool_k, pool_v, tables, q_start, q_lens, li, kq, vq,
                 window=win, k_scale=pool_ks, v_scale=pool_vs,
                 chunk_k_scale=ksc, chunk_v_scale=vsc,
@@ -102,7 +116,7 @@ def chunk_prefill_step(
         else:
             kc = k.astype(pool_k.dtype)
             vc = v.astype(pool_v.dtype)
-            o = attn_mod.paged_prefill_attention(
+            o = attn_fn(
                 q, pool_k, pool_v, tables, q_start, q_lens, li, kc, vc,
                 window=win, kv_bits=cfg.serve_kv_bits,
             )
@@ -146,7 +160,31 @@ def chunk_prefill_step(
         pools = (scatter(pool_k, ck), scatter(pool_v, cv), None, None)
 
     x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
-    last = x[rows, jnp.maximum(q_lens - 1, 0)]  # [B, D] last valid position
+    return x, pools
+
+
+def chunk_prefill_step(
+    params,
+    tokens: jnp.ndarray,  # [B, C] int32 — this chunk's tokens (tail-padded)
+    q_start: jnp.ndarray,  # [B] int32 — tokens already materialized per row
+    q_lens: jnp.ndarray,  # [B] int32 — valid tokens of this chunk (<= C)
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    pool_k: jnp.ndarray,  # [L, P, ps, Hkv, Dk]
+    pool_v: jnp.ndarray,
+    pool_ks,  # [L, P, ps, Hkv, 1] f32 or None (kv_bits == 16)
+    pool_vs,
+    *,
+    cfg: ArchConfig,
+    mesh=None,
+):
+    """Returns (logits [B, V] at each row's last valid chunk position,
+    new_pools); see :func:`chunk_forward` for the contract."""
+    x, pools = chunk_forward(
+        params, tokens, q_start, q_lens, tables,
+        pool_k, pool_v, pool_ks, pool_vs, cfg=cfg, mesh=mesh,
+    )
+    rows = jnp.arange(x.shape[0])
+    last = x[rows, jnp.maximum(q_lens.astype(jnp.int32) - 1, 0)]  # [B, D]
     logits = dense(last, params["unembed"]).astype(jnp.float32)
     logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30)
     return logits, pools

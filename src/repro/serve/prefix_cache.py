@@ -145,6 +145,26 @@ class PrefixCache:
             self._by_page[p] = h
             self.stats.registered_blocks += 1
 
+    def forget_pages(self, pages: list[int]) -> None:
+        """Drop the hash entries (and any LRU retention) for ``pages`` whose
+        *content* is no longer the registered blocks' K/V — speculative
+        rollback truncates tail pages that verify may have overwritten with
+        rejected-token K/V, so they must stop serving prefix hits before the
+        pool reclaims them.  Unregistered pages are ignored."""
+        for p in pages:
+            h = self._by_page.pop(p, None)
+            if h is None:
+                continue
+            del self._entries[h]
+            retained = h in self._lru
+            if retained:
+                del self._lru[h]
+            # a retained page (refcount 0) was held out of the free list by
+            # the release hook; with its entry gone nothing will ever free
+            # it, so hand it back to the pool now
+            if retained and self.pool.refcount(p) == 0:
+                self.pool.release_retained(p)
+
     # ----------------------------------------------------------------- admin
     @property
     def num_entries(self) -> int:

@@ -6,9 +6,21 @@ raw bf16) its kernel calls run against, ``kv_bits`` selects the KV-cache
 payload (8 = int8 + per-(token, head) scales, 16 = bf16).  The engine groups
 same-``group_key`` requests into one batched kernel call per decode step.
 
+``spec_k > 0`` opts the request into **self-speculative decoding**: each
+engine round drafts up to ``spec_k`` greedy tokens with the cheap
+``draft_bits`` weight set and verifies them in one multi-token pass at the
+request's own ``w_bits`` (serve/spec_decode.py).  Acceptance is exact token
+equality, so the emitted stream is identical to plain greedy decode.
+
+Termination: a request finishes when it has emitted ``max_new_tokens``, or
+the moment it emits ``eos_id`` (or any token in ``stop_tokens``) — in
+prefill, plain decode, and the speculative verify path alike.  The stop
+token itself is kept in ``out_tokens``.
+
 Decoding is greedy, which is what makes recompute-style preemption safe: a
 preempted request re-prefills ``prompt + out_tokens[:-1]`` and continues
-deterministically.
+deterministically (speculative rounds emit exactly the greedy stream, so the
+invariant survives spec decoding unchanged).
 """
 from __future__ import annotations
 
@@ -22,6 +34,7 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"
     FINISHED = "finished"
+    FAILED = "failed"  # rejected at admission (e.g. context can never fit)
 
 
 @dataclass
@@ -31,6 +44,10 @@ class ServeRequest:
     max_new_tokens: int
     w_bits: int = 8  # weight precision for this request's kernel calls
     kv_bits: int = 8  # KV-cache payload precision (8=int8+scales, 16=bf16)
+    eos_id: int | None = None  # finish on emitting this token
+    stop_tokens: tuple[int, ...] = ()  # additional stop token ids
+    spec_k: int = 0  # speculative draft tokens per round (0 = plain decode)
+    draft_bits: int = 4  # weight precision of the speculative draft passes
     arrival: int = 0  # engine-assigned admission-order ticket (FCFS key)
     state: RequestState = RequestState.WAITING
     out_tokens: list[int] = field(default_factory=list)
@@ -38,15 +55,32 @@ class ServeRequest:
     preemptions: int = 0
     submit_ts: float = 0.0  # perf_counter at submit (TTFT reference point)
     ttft: float | None = None  # submit -> first output token, seconds
+    error: str | None = None  # set when state is FAILED
 
     @property
     def done(self) -> bool:
         return self.state is RequestState.FINISHED
 
     @property
+    def failed(self) -> bool:
+        return self.state is RequestState.FAILED
+
+    @property
     def group_key(self) -> tuple[int, int]:
         """(w_bits, kv_bits) — requests with equal keys batch together."""
         return (self.w_bits, self.kv_bits)
+
+    @property
+    def spec_group_key(self) -> tuple[int, int, int]:
+        """(w_bits, draft_bits, kv_bits) — speculative rounds batch requests
+        that share both the draft and the verify weight set."""
+        return (self.w_bits, self.draft_bits, self.kv_bits)
+
+    def is_stop(self, tok: int) -> bool:
+        """True when emitting ``tok`` must terminate the request."""
+        return (self.eos_id is not None and tok == self.eos_id) or (
+            tok in self.stop_tokens
+        )
 
     def feed_tokens(self) -> np.ndarray:
         """Tokens a (re-)prefill must materialize in the cache: the prompt

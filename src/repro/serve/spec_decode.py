@@ -1,0 +1,144 @@
+"""Self-speculative decoding: W4 draft, exact target-precision verify.
+
+SPEED's premise is that one precision-scalable datapath trades bits for
+throughput on the *same* weights (paper Sec. II-B).  The serving engine
+already exploits that per-request (each request picks its ``w_bits``); this
+module exploits it **per token**: the cheap low-bit weight set drafts ahead,
+the request's own target precision verifies, and exact greedy acceptance
+turns the multi-precision machinery from a quality knob into a latency
+multiplier.
+
+One speculative round for a batch of same-``(w_bits, draft_bits, kv_bits)``
+requests is ONE jitted call (:func:`spec_decode_round`):
+
+  1. **Draft** — ``spec_k`` greedy single-token steps at ``draft_bits``
+     (``serve/decode.py::paged_decode_step`` against the request's own paged
+     KV cache), chained on-device: each step's argmax feeds the next, so a
+     round costs one host dispatch + one sync instead of ``spec_k + 1``.
+     Draft K/V is scattered into the request's pages as it goes (draft step
+     ``i+1`` must attend to draft tokens ``1..i``).
+  2. **Verify** — the window ``[last_token, d_1, .., d_k]`` runs ONE
+     multi-token pass at the request's target ``w_bits`` through the chunked
+     -prefill kernel (``ops.paged_mqa_verify`` — a verify window *is* a
+     causal self-chunk), producing target-greedy tokens at every window
+     position.  The verify's target-precision K/V overwrites the draft K/V
+     in the pages, so verify logits never depend on draft state: they are
+     exactly what plain greedy decode would compute.
+  3. **Accept** — fused in the same call: draft ``d_i`` is accepted iff it
+     equals the target token at window position ``i-1`` and every earlier
+     draft was accepted.  Because both sides decode greedily, acceptance is
+     *exact token equality* — an accepted draft IS the target token, so the
+     emitted tokens are simply the first ``accept + 1`` target tokens
+     (``+1``: the verify's own next-token prediction rides along free).
+     Spec-on output is therefore identical to spec-off output, which keeps
+     the recompute-preemption safety invariant (serve/request.py) intact.
+
+The host engine then advances ``cache_len`` by the emitted count and rolls
+back rejected tail positions via ``PagedKVCache.truncate`` (dropping
+now-empty tail pages back to the pool, after un-registering any prefix-cache
+block whose page content the rejected window overwrote).  Positions between
+the new ``cache_len`` and the end of the verify window hold K/V of rejected
+tokens, but ``cache_len`` masking means they are never attended and the next
+round overwrites them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense
+from repro.serve.decode import paged_decode_step
+from repro.serve.prefill import chunk_forward
+
+
+def spec_decode_round(
+    draft_params,  # param tree quantized at draft_bits
+    params,  # param tree at the group's target w_bits
+    tokens: jnp.ndarray,  # [B, 1] int32 — last emitted token per request
+    lengths: jnp.ndarray,  # [B] int32 — tokens already in the cache
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    valid: jnp.ndarray,  # [B] bool — False for pow2-bucket padding rows
+    n_draft: jnp.ndarray,  # [B] int32 — draft tokens this row runs (<= spec_k)
+    pool_k: jnp.ndarray,  # [L, P, ps, Hkv, Dk]
+    pool_v: jnp.ndarray,
+    pool_ks,  # [L, P, ps, Hkv, 1] f32 or None (kv_bits == 16)
+    pool_vs,
+    *,
+    cfg: ArchConfig,
+    spec_k: int,  # static: draft steps unrolled in the jitted graph
+    mesh=None,
+):
+    """One fused draft+verify+accept round.
+
+    Returns ``(target_tokens [B, spec_k+1], accept [B], new_pools)``: row b
+    emits ``target_tokens[b, : accept[b] + 1]`` (``accept[b] <= n_draft[b]``,
+    so a row never emits past its clipped window).  Every row's table must
+    cover positions ``[0, lengths[b] + n_draft[b] + 1)`` — the engine
+    guarantees this via ``_ensure_page_room`` (which degrades ``n_draft``
+    before evicting anyone).  Not jit'd here: the engine jits a closure over
+    its mesh, mirroring decode/prefill.
+    """
+    pools = (pool_k, pool_v, pool_ks, pool_vs)
+    window = [tokens]
+    tok = tokens
+    # --- draft: spec_k greedy steps at draft_bits, chained on-device.  Rows
+    # past their own n_draft keep computing (the graph is static) but stop
+    # appending K/V (valid=False drops the scatter) and their surplus drafts
+    # can't be accepted (the accept mask below caps at n_draft).
+    for i in range(spec_k):
+        step_valid = valid & (i < n_draft)
+        logits, pools = paged_decode_step(
+            draft_params, tok, lengths + i, tables, step_valid, *pools,
+            cfg=cfg, mesh=mesh,
+        )
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        window.append(tok)
+    wtok = jnp.concatenate(window, axis=1)  # [B, spec_k + 1]
+
+    # --- verify: one causal self-chunk at the target precision.  ctx_lens =
+    # round-start lengths, so verify attends only to committed cache + the
+    # window itself — never to draft K/V — and its scatter overwrites the
+    # draft K/V with target-precision values.
+    q_lens = jnp.where(valid, n_draft + 1, 0).astype(jnp.int32)
+    x, pools = chunk_forward(
+        params, wtok, lengths, q_lens, tables, *pools,
+        cfg=cfg, mesh=mesh, verify=True,
+    )
+    logits = dense(x, params["unembed"]).astype(jnp.float32)  # [B, C, V]
+    logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30)
+    tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, C]
+
+    # --- fused accept-length: longest draft prefix matching the target
+    drafts = wtok[:, 1:]  # [B, spec_k]
+    in_window = jnp.arange(spec_k, dtype=jnp.int32)[None, :] < n_draft[:, None]
+    match = (drafts == tgt[:, :-1]) & in_window
+    accept = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    return tgt, accept, pools
+
+
+def plan_windows(
+    reqs, capacities: np.ndarray, spec_k: int
+) -> np.ndarray:
+    """Per-row draft budget for one round: each request drafts at most its
+    own ``spec_k``, clipped so the round (a) never emits past
+    ``max_new_tokens`` (mid-window budget clipping — the verify's bonus
+    token occupies one slot) and (b) never writes past the pages the pool
+    could actually grant (``_ensure_page_room`` degrades under pressure
+    rather than evicting for speculation)."""
+    n_draft = np.zeros(len(reqs), np.int32)
+    for i, r in enumerate(reqs):
+        remaining = r.max_new_tokens - len(r.out_tokens)
+        room = int(capacities[i]) - r.cache_len - 1  # window writes n_draft+1
+        n_draft[i] = max(0, min(r.spec_k, spec_k, remaining - 1, room))
+    return n_draft
+
+
+def clip_stop(req, emitted: list[int]) -> tuple[list[int], bool]:
+    """Mid-window stop-token clipping: cut ``emitted`` after the first stop
+    token (kept, like plain decode keeps it).  Returns (tokens, stopped)."""
+    for j, tok in enumerate(emitted):
+        if req.is_stop(tok):
+            return emitted[: j + 1], True
+    return emitted, False

@@ -86,6 +86,31 @@ def test_auto_dataflow_dispatch():
     np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-3)
 
 
+@pytest.mark.parametrize("w_bits", [4, 8])
+def test_ff_accumulates_partials_in_f32_at_large_k(w_bits):
+    """Regression: the FF kernel used to accumulate cross-K-stage partial
+    sums in the bf16 *output* dtype (and the wrapper applied w_scale in
+    bf16), diverging from CF's f32 VMEM accumulator as K grows.  Both
+    dataflows now run the same f32 stage-sum in the same order, so at
+    K = 4096 (8 stages) they must agree bit-for-bit and sit within one bf16
+    rounding of the f32 oracle."""
+    m, k, n = 8, 4096, 128
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.bfloat16)
+    w = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    wd, ws = ops.pack_weights(w, w_bits)
+    ff = ops.mpmm(x, wd, ws, w_bits=w_bits, mode="dequant", dataflow="ff")
+    cf = ops.mpmm(x, wd, ws, w_bits=w_bits, mode="dequant", dataflow="cf")
+    assert ff.dtype == cf.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(ff, np.float32), np.asarray(cf, np.float32)
+    )
+    exp = ref.mpmm_ref(x, wd, ws, w_bits=w_bits, mode="dequant")
+    np.testing.assert_allclose(
+        np.asarray(ff, np.float32), np.asarray(exp, np.float32),
+        rtol=1e-2, atol=1e-2,
+    )
+
+
 def test_xla_backend_matches_pallas():
     x, w = _float_case(32, 256, 128)
     wd, ws = ops.pack_weights(w, 4)

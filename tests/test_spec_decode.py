@@ -1,0 +1,351 @@
+"""Speculative decoding (W4/W8 draft -> exact target verify): token
+equivalence with plain greedy decode across precisions (including under
+forced preemption and prefix-cache warm starts), KV truncate/rollback
+refcount + CoW invariants, and regression tests for the stop-token and
+oversized-context-livelock fixes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import (
+    PagedKVCache,
+    PrefixCache,
+    RequestState,
+    ServeEngine,
+    ServeRequest,
+    block_hashes,
+)
+
+
+def _cfg(**kw):
+    base = dataclasses.replace(
+        get_config("llama3.2-3b").reduced(),
+        n_layers=2, d_model=64, d_ff=128, vocab=256, n_heads=4, n_kv_heads=2,
+        head_dim=16, serve_kv_bits=8,
+    )
+    return dataclasses.replace(base, **kw)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run(cfg, params, prompts, new_tokens=8, spec_k=0, num_pages=64,
+         prefill_chunk=16, enable_prefix_cache=True, **submit_kw):
+    eng = ServeEngine(
+        cfg, params, max_slots=len(prompts), num_pages=num_pages, page_size=4,
+        prefill_chunk=prefill_chunk, enable_prefix_cache=enable_prefix_cache,
+        spec_k=spec_k,
+    )
+    reqs = [eng.submit(p, new_tokens, **submit_kw) for p in prompts]
+    eng.run()
+    return eng, reqs
+
+
+# ------------------------------------------------ spec == plain equivalence
+@pytest.mark.parametrize("kv_bits", [4, 8, 16])
+def test_spec_equals_plain_greedy(setup, kv_bits):
+    """Speculative decode must emit token-for-token the plain greedy stream
+    for every kv precision (greedy draft + greedy verify => exact accept)."""
+    cfg, params = setup
+    w_bits = 16 if kv_bits == 16 else 8
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 9).astype(np.int32) for _ in range(3)]
+    _, plain = _run(cfg, params, prompts, w_bits=w_bits, kv_bits=kv_bits)
+    eng, spec = _run(cfg, params, prompts, spec_k=3, w_bits=w_bits,
+                     kv_bits=kv_bits, draft_bits=4)
+    assert [r.out_tokens for r in plain] == [r.out_tokens for r in spec]
+    assert all(len(r.out_tokens) == 8 for r in spec)  # budget exactly honored
+    assert eng.stats.spec_rounds > 0
+    assert eng.stats.spec_draft_tokens >= eng.stats.spec_accepted_tokens >= 0
+
+
+@pytest.mark.parametrize("w_bits,draft_bits", [(4, 4), (8, 8), (16, 8)])
+def test_spec_equals_plain_across_weight_precisions(setup, w_bits, draft_bits):
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, 7).astype(np.int32) for _ in range(2)]
+    kv = 16 if w_bits == 16 else 8
+    _, plain = _run(cfg, params, prompts, w_bits=w_bits, kv_bits=kv)
+    eng, spec = _run(cfg, params, prompts, spec_k=4, w_bits=w_bits,
+                     kv_bits=kv, draft_bits=draft_bits)
+    assert [r.out_tokens for r in plain] == [r.out_tokens for r in spec]
+    # a same-precision draft is the target: every draft must be accepted
+    if draft_bits == w_bits:
+        assert eng.stats.spec_accept_rate == 1.0
+
+
+def test_spec_mixed_precision_stream(setup):
+    """W4/W8/bf16 spec requests in one engine still group, decode in the
+    same steps, and match their single-precision plain runs."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32) for _ in range(4)]
+    mix = [(4, 8), (8, 8), (16, 16), (8, 8)]
+    eng = ServeEngine(cfg, params, max_slots=4, num_pages=64, page_size=4,
+                      spec_k=2, draft_bits=4)
+    spec = [
+        eng.submit(p, 6, w_bits=w, kv_bits=k)
+        for p, (w, k) in zip(prompts, mix)
+    ]
+    eng.run()
+    for i, (w, k) in enumerate(mix):
+        _, (plain,) = _run(cfg, params, [prompts[i]], new_tokens=6,
+                           w_bits=w, kv_bits=k)
+        assert spec[i].out_tokens == plain.out_tokens, f"request {i} (w{w}kv{k})"
+    assert eng.stats.mixed_precision_steps > 0
+
+
+def test_spec_under_forced_preemption(setup):
+    """Pool too small for the batch: spec requests get preempted and
+    recompute, and still emit exactly the plain greedy stream."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, 10).astype(np.int32) for _ in range(3)]
+    _, plain = _run(cfg, params, prompts, new_tokens=8, num_pages=10,
+                    w_bits=8, kv_bits=8)
+    eng, spec = _run(cfg, params, prompts, new_tokens=8, num_pages=10,
+                     spec_k=3, w_bits=8, kv_bits=8)
+    assert eng.stats.preemptions > 0
+    assert [r.out_tokens for r in plain] == [r.out_tokens for r in spec]
+    # every page is reclaimable again after the run
+    cache = eng.cache_for(8)
+    assert cache.num_allocatable == 10
+    assert not cache._tables
+
+
+def test_spec_with_warm_prefix_start(setup):
+    """A spec request admitted onto cached prefix pages (warm start) must
+    match the identical request on a cold spec-off engine."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    sys_prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab, 5).astype(np.int32) for _ in range(2)]
+    prompts = [np.concatenate([sys_prompt, t]) for t in tails]
+
+    eng = ServeEngine(cfg, params, max_slots=2, num_pages=64, page_size=4,
+                      prefill_chunk=8, spec_k=3)
+    a = eng.submit(prompts[0], 6, w_bits=8, kv_bits=8)
+    eng.run()
+    b = eng.submit(prompts[1], 6, w_bits=8, kv_bits=8)
+    eng.run()
+    assert eng.stats.prefix_hit_tokens >= 12  # b adopted the shared prefix
+
+    for i, warm in enumerate((a, b)):
+        _, (cold,) = _run(cfg, params, [prompts[i]], new_tokens=6,
+                          enable_prefix_cache=False, w_bits=8, kv_bits=8)
+        assert warm.out_tokens == cold.out_tokens, f"request {i}"
+
+
+def test_spec_window_clips_at_token_budget(setup):
+    """max_new_tokens not a multiple of the round size: the last window is
+    clipped mid-round and the budget is honored exactly."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, 6).astype(np.int32)]
+    for budget in (1, 2, 5, 7):
+        _, plain = _run(cfg, params, prompts, new_tokens=budget,
+                        w_bits=8, kv_bits=8)
+        _, spec = _run(cfg, params, prompts, new_tokens=budget, spec_k=3,
+                       w_bits=8, kv_bits=8, draft_bits=8)
+        assert len(spec[0].out_tokens) == budget
+        assert spec[0].out_tokens == plain[0].out_tokens
+
+
+# ------------------------------------------------- truncate / rollback pool
+def _pool(num_pages=8, page_size=4, kv_bits=8):
+    cfg = _cfg()
+    return PagedKVCache(cfg, num_pages=num_pages, page_size=page_size,
+                        kv_bits=kv_bits)
+
+
+def test_truncate_drops_tail_pages_only():
+    pool = _pool()
+    pages = list(pool.allocate(0, 4))
+    dropped = pool.truncate(0, 6)  # 6 tokens -> 2 pages kept
+    assert dropped == pages[2:]
+    assert pool.table(0) == pages[:2]
+    assert pool.num_free == 6
+    # truncating inside the covered range is a no-op
+    assert pool.truncate(0, 5) == []
+    # LIFO: a dropped page is the next one handed out (tail decref'd first,
+    # so the former slot-2 page sits on top of the free list)
+    assert pool.extend(0, 1) == [pages[2]]
+    assert pool.capacity_tokens(0) == 12
+
+
+def test_truncate_shared_pages_decref_not_free():
+    """A shared tail page loses only this request's reference; the other
+    holder keeps it alive and its payload is untouched."""
+    pool = _pool()
+    owner = pool.allocate(0, 3)
+    pool.allocate(1, 3, prefix_pages=tuple(owner))  # full adoption
+    assert pool.refcount(owner[2]) == 2
+    dropped = pool.truncate(1, 4)  # rid 1 keeps only the first page
+    assert dropped == owner[1:]
+    assert pool.refcount(owner[1]) == 1 and pool.refcount(owner[2]) == 1
+    assert pool.num_free == 5  # nothing actually freed: rid 0 still holds all
+    assert pool.table(0) == owner
+    pool.free(0)
+    pool.free(1)
+    assert pool.num_free == 8
+
+
+def test_truncate_after_cow_fork_leaves_original():
+    """Truncating a forked table drops the private copy back to the pool
+    while the original shared page (and its refcount) is untouched."""
+    pool = _pool()
+    orig = pool.allocate(0, 2)
+    pool.allocate(1, 2, prefix_pages=tuple(orig))
+    forked = pool.fork_page(1, 1)
+    assert pool.refcount(orig[1]) == 1 and pool.refcount(forked) == 1
+    dropped = pool.truncate(1, 4)  # drop the fork, keep the shared head
+    assert dropped == [forked]
+    assert pool.refcount(forked) == 0 and forked in pool._free
+    assert pool.refcount(orig[1]) == 1  # rid 0's reference survives
+    assert pool.table(0) == orig
+
+
+def test_truncate_forgotten_registered_page_returns_to_pool():
+    """forget_pages before truncate: a registered tail page whose content a
+    rejected verify window overwrote must neither serve hits nor leak."""
+    pool = _pool()
+    pc = PrefixCache(pool)
+    hashes = block_hashes(np.arange(8, dtype=np.int32), 4)
+    pages = pool.allocate(0, 2)
+    pc.register(hashes, pages)
+    pc.forget_pages([pages[1]])
+    assert pc.match(hashes) == pages[:1]  # tail block no longer matchable
+    dropped = pool.truncate(0, 4)
+    assert dropped == [pages[1]]
+    # forgotten page went straight to the free list (not retained)
+    assert pages[1] in pool._free and pc.num_retained == 0
+    # a *retained* forgotten page is handed back immediately
+    pool.free(0)
+    assert pc.num_retained == 1  # pages[0] still registered -> retained
+    pc.forget_pages([pages[0]])
+    assert pc.num_retained == 0 and pool.num_free == 8
+
+
+def test_spec_rollback_truncates_tail_pages(setup):
+    """After a spec run every page beyond each live request's cache_len has
+    been rolled back: finished engines return the whole pool."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab, 9).astype(np.int32) for _ in range(2)]
+    eng, reqs = _run(cfg, params, prompts, new_tokens=6, spec_k=3,
+                     num_pages=32, w_bits=8, kv_bits=8, draft_bits=8)
+    cache = eng.cache_for(8)
+    assert cache.num_allocatable == 32
+    assert not cache._tables and not cache._refcount
+
+
+# --------------------------------------------------- stop-token regressions
+def test_eos_terminates_decode(setup):
+    """Pre-fix the engine always burned max_new_tokens; with eos_id set it
+    must stop the moment the stop token is emitted (token kept)."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)]
+    _, (ref,) = _run(cfg, params, prompts, new_tokens=8, w_bits=8, kv_bits=8)
+    eos = ref.out_tokens[3]
+    first = ref.out_tokens.index(eos)
+    _, (req,) = _run(cfg, params, prompts, new_tokens=8, w_bits=8, kv_bits=8,
+                     eos_id=eos)
+    assert req.out_tokens == ref.out_tokens[: first + 1]
+    assert req.done
+
+
+def test_eos_terminates_in_prefill(setup):
+    """A request whose *first* token is the stop token finishes straight out
+    of prefill with exactly one emitted token."""
+    cfg, params = setup
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)]
+    _, (ref,) = _run(cfg, params, prompts, new_tokens=4, w_bits=8, kv_bits=8)
+    _, (req,) = _run(cfg, params, prompts, new_tokens=4, w_bits=8, kv_bits=8,
+                     eos_id=ref.out_tokens[0])
+    assert req.out_tokens == ref.out_tokens[:1] and req.done
+
+
+def test_eos_clips_mid_spec_window(setup):
+    """The stop token can land anywhere inside an accepted verify window;
+    emission must cut right after it and the caches must roll back clean."""
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)]
+    _, (ref,) = _run(cfg, params, prompts, new_tokens=8, w_bits=8, kv_bits=8)
+    for pos in (2, 4, 6):
+        eos = ref.out_tokens[pos]
+        first = ref.out_tokens.index(eos)
+        eng, (req,) = _run(cfg, params, prompts, new_tokens=8, spec_k=3,
+                           w_bits=8, kv_bits=8, draft_bits=8, eos_id=eos)
+        assert req.out_tokens == ref.out_tokens[: first + 1]
+        assert req.done
+        assert eng.cache_for(8).num_allocatable == 64  # nothing leaked
+        # accept stats count only drafts the emission cashed in: every spec
+        # round emits its counted accepts + 1 (prefill emits the first token)
+        spec_emitted = len(req.out_tokens) - 1
+        assert (eng.stats.spec_accepted_tokens
+                <= spec_emitted - eng.stats.spec_rounds)
+
+
+def test_stop_tokens_list(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(10)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)]
+    _, (ref,) = _run(cfg, params, prompts, new_tokens=8, w_bits=8, kv_bits=8)
+    stops = (ref.out_tokens[2], ref.out_tokens[5])
+    first = min(ref.out_tokens.index(s) for s in stops)
+    _, (req,) = _run(cfg, params, prompts, new_tokens=8, w_bits=8, kv_bits=8,
+                     stop_tokens=stops)
+    assert req.out_tokens == ref.out_tokens[: first + 1]
+
+
+# ------------------------------------------- oversized-context (livelock) fix
+def test_oversized_request_rejected_at_submit(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_slots=1, num_pages=4, page_size=4)
+    with pytest.raises(ValueError, match="never fit"):
+        eng.submit(np.arange(8, dtype=np.int32), 32, w_bits=8, kv_bits=8)
+
+
+def test_oversized_request_fails_at_admission_without_livelock(setup):
+    """A too-big request that reaches the queue anyway (submitted behind the
+    engine's back) must FAIL with a clear error — pre-fix it would admit,
+    outgrow the pool, self-preempt and readmit forever while run() counted
+    the admission as progress."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_slots=2, num_pages=4, page_size=4)
+    ok = eng.submit(np.arange(4, dtype=np.int32), 4, w_bits=8, kv_bits=8)
+    big = ServeRequest(rid=99, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=64, w_bits=8, kv_bits=8, arrival=10**6)
+    eng._sched.submit(big)
+    done = eng.run()  # must terminate
+    assert ok.done and len(ok.out_tokens) == 4
+    assert big.failed and big.state is RequestState.FAILED
+    assert "never fit" in big.error and "pages" in big.error
+    assert big in done and eng.stats.failed == 1
+    # the pool is clean: the failed request never held pages
+    assert eng.cache_for(8).num_allocatable == 4
+
+
+def test_failed_head_does_not_starve_followers(setup):
+    """The FAILED head-of-line request is removed, so younger requests admit
+    on the next step instead of being blocked forever."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_slots=2, num_pages=8, page_size=4)
+    big = ServeRequest(rid=50, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=64, w_bits=8, kv_bits=8, arrival=-1)
+    eng._sched.submit(big)  # sits at the head of the queue
+    ok = eng.submit(np.arange(4, dtype=np.int32), 4, w_bits=8, kv_bits=8)
+    eng.run()
+    assert big.failed and ok.done and len(ok.out_tokens) == 4
