@@ -14,7 +14,6 @@ per-target relative errors.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import math
 import random
 

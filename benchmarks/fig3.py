@@ -5,7 +5,6 @@ from __future__ import annotations
 
 from collections import Counter
 
-from repro.core.isa import Dataflow
 from repro.core.perfmodel import (
     AraModel,
     SpeedModel,

@@ -112,15 +112,14 @@ def paged_decode_rows(smoke: bool = False) -> list[tuple]:
     rows_idx = jnp.arange(b_)
     sm = 1.0 / float(np.sqrt(d))
 
-    from repro.serve.decode import _gather_pages
 
     @jax.jit
     def gather_path(lengths):
         # the old serve path: copy every table slot, insert, attend densely
-        kd = _gather_pages(kp, tables)[0].at[rows_idx, lengths].set(nk)
-        vd = _gather_pages(vp, tables)[0].at[rows_idx, lengths].set(nv)
-        ksd = _gather_pages(ks, tables)[0].at[rows_idx, lengths].set(nks)
-        vsd = _gather_pages(vs, tables)[0].at[rows_idx, lengths].set(nvs)
+        kd = ref.gather_pages(kp, tables)[0].at[rows_idx, lengths].set(nk)
+        vd = ref.gather_pages(vp, tables)[0].at[rows_idx, lengths].set(nv)
+        ksd = ref.gather_pages(ks, tables)[0].at[rows_idx, lengths].set(nks)
+        vsd = ref.gather_pages(vs, tables)[0].at[rows_idx, lengths].set(nvs)
         return ref.mqa_decode_ref(q, kd, vd, ksd, vsd, lengths + 1, sm_scale=sm)
 
     def paged_path(lengths):

@@ -7,11 +7,13 @@ from the dry-run artifacts (python -m repro.launch.roofline), not this box's
 CPU walltime.
 
 ``--smoke`` runs only the kernel microbenchmarks at small shapes plus one
-tiny serving row, the shared-prefix cold/warm TTFT row, and the
-speculative-decoding row — a CI guard that the perf plumbing keeps
-importing, compiling and producing sane numbers (that a warm prefix cache
-actually cuts TTFT, and that spec-on decode is no slower than spec-off at
->= 0.9 draft acceptance on the synthetic-repetition workload); the paper
+tiny serving row, the shared-prefix cold/warm TTFT row, the
+speculative-decoding row, and the sampled-generation row — a CI guard that
+the perf plumbing keeps importing, compiling and producing sane numbers
+(that a warm prefix cache actually cuts TTFT, that spec-on decode is no
+slower than spec-off at >= 0.9 draft acceptance on the synthetic-repetition
+workload, and that seeded sampling reproduces its streams, costs < 10% of
+greedy throughput, and keeps spec-sampled acceptance >= 0.5); the paper
 tables and full sweeps stay out of the hot CI path.  ``--json PATH``
 additionally writes the smoke rows as JSON so CI can archive the bench
 trajectory per PR (``BENCH_smoke.json`` artifacts).
@@ -85,6 +87,27 @@ def smoke(json_path: str | None = None) -> None:
             f"spec-on decode {sd['spec_tok_per_s']:.0f} tok/s < spec-off "
             f"{sd['plain_tok_per_s']:.0f} tok/s at accept "
             f"{sd['accept_rate']:.2f}"
+        )
+
+    print("\n# === Sampled generation (greedy vs temperature, spec-sampled) ===")
+    print("name,value")
+    sa = serve_bench.sampling_stats(n_iters=3)
+    for k, v in sa.items():
+        print(f"sampling_{k},{v:.3f}")
+        artifact[f"sampling_{k}"] = v
+    if not sa["seed_reproducible"]:
+        failures.append("fixed-seed sampled streams not reproducible")
+    if sa["sampled_vs_greedy"] < 0.9:
+        failures.append(
+            f"sampled decode {sa['sampled_tok_per_s']:.0f} tok/s < 0.9x "
+            f"greedy {sa['greedy_tok_per_s']:.0f} tok/s (in-jit sampling "
+            "should be near-free)"
+        )
+    if sa["spec_sampled_accept"] < 0.5:
+        failures.append(
+            f"spec-sampled accept rate {sa['spec_sampled_accept']:.2f} < 0.5 "
+            "on the synthetic-repetition workload (W8 draft tracks a bf16 "
+            "target closely; rejection sampling should accept most drafts)"
         )
 
     # write the trajectory BEFORE gating: failing runs are exactly the ones

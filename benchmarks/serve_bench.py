@@ -10,8 +10,10 @@ fusion), not absolute CPU numbers; real-TPU serving throughput comes from
 the roofline path.
 
 Importable: ``rows()`` yields per-configuration dicts,
-``shared_prefix_stats()`` measures cold vs warm prefix-cache TTFT, and
-``spec_decode_stats()`` measures spec-on vs spec-off decode throughput
+``shared_prefix_stats()`` measures cold vs warm prefix-cache TTFT,
+``spec_decode_stats()`` measures spec-on vs spec-off decode throughput, and
+``sampling_stats()`` measures the sampled workload (greedy vs temperature-0.8
+tok/s, fixed-seed reproducibility, spec-on sampled accept rate)
 (all best-of-N — this box's walltimes swing run to run).
 """
 from __future__ import annotations
@@ -72,7 +74,7 @@ def _percentile_ms(samples, q) -> float:
 def _run_one(batch_size: int, mix: list[int]) -> dict:
     import numpy as np
 
-    from repro.serve import ServeEngine
+    from repro.serve import PrecisionParams, SamplingParams, ServeEngine
 
     cfg, params = _setup()
     page_size = 8
@@ -85,12 +87,7 @@ def _run_one(batch_size: int, mix: list[int]) -> dict:
     )
     rng = np.random.default_rng(0)
     for i in range(batch_size):
-        engine.submit(
-            rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
-            NEW_TOKENS,
-            w_bits=mix[i % len(mix)],
-            kv_bits=8,
-        )
+        engine.submit(rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32), SamplingParams(max_new_tokens=NEW_TOKENS), PrecisionParams(w_bits=mix[i % len(mix)], kv_bits=8))
     engine.run()
     s = engine.stats
     return {
@@ -116,7 +113,7 @@ def _shared_prefix_iter(shared, tails, w_bits=8, kv_bits=8):
     """One cold-then-warm engine pass; returns (cold_ttft, warm_ttfts, eng)."""
     import numpy as np
 
-    from repro.serve import ServeEngine
+    from repro.serve import PrecisionParams, SamplingParams, ServeEngine
 
     cfg, params = _setup()
     page_size = 8
@@ -133,13 +130,11 @@ def _shared_prefix_iter(shared, tails, w_bits=8, kv_bits=8):
     # otherwise the cold/warm ratio overstates the prefix-cache win
     engine.params_for(w_bits)
     engine.cache_for(kv_bits)
-    cold = engine.submit(np.concatenate([shared, tails[0]]), NEW_TOKENS,
-                         w_bits=w_bits, kv_bits=kv_bits)
+    cold = engine.submit(np.concatenate([shared, tails[0]]), SamplingParams(max_new_tokens=NEW_TOKENS), PrecisionParams(w_bits=w_bits, kv_bits=kv_bits))
     engine.run()
     warm = []
     for tail in tails[1:]:
-        r = engine.submit(np.concatenate([shared, tail]), NEW_TOKENS,
-                          w_bits=w_bits, kv_bits=kv_bits)
+        r = engine.submit(np.concatenate([shared, tail]), SamplingParams(max_new_tokens=NEW_TOKENS), PrecisionParams(w_bits=w_bits, kv_bits=kv_bits))
         engine.run()
         warm.append(r.ttft)
     return cold.ttft, warm, engine
@@ -180,18 +175,21 @@ def shared_prefix_stats(n_iters: int = 5) -> dict:
     }
 
 
-def _spec_iter(prompts, spec_k: int):
+def _spec_iter(prompts, spec_k: int, temperature: float = 0.0):
     """One engine pass over the repetition workload; returns (tok/s, accept,
-    out_tokens).  spec_k == 0 is the plain-greedy control."""
-    from repro.serve import ServeEngine
+    out_tokens).  spec_k == 0 is the plain control, temperature 0 greedy;
+    sampled passes seed request i with i (fixed-seed reproducibility).
+    Every prompt gets its own slot (the sampled workload runs wider than
+    SPEC_BATCH to amortize fixed per-call host overhead)."""
+    from repro.serve import PrecisionParams, SamplingParams, ServeEngine
 
     cfg, params = _setup()
     page_size = 8
     pages_per_slot = -(-(SPEC_PROMPT_LEN + SPEC_NEW_TOKENS) // page_size)
     engine = ServeEngine(
         cfg, params,
-        max_slots=SPEC_BATCH,
-        num_pages=SPEC_BATCH * pages_per_slot,
+        max_slots=len(prompts),
+        num_pages=len(prompts) * pages_per_slot,
         page_size=page_size,
         spec_k=spec_k,
         draft_bits=SPEC_DRAFT_BITS,
@@ -200,9 +198,17 @@ def _spec_iter(prompts, spec_k: int):
     engine.params_for(SPEC_W_BITS)
     engine.params_for(SPEC_DRAFT_BITS)
     engine.cache_for(8)
+    precision = PrecisionParams(w_bits=SPEC_W_BITS, kv_bits=8)
     reqs = [
-        engine.submit(p, SPEC_NEW_TOKENS, w_bits=SPEC_W_BITS, kv_bits=8)
-        for p in prompts
+        engine.submit(
+            p,
+            SamplingParams(
+                temperature=temperature, seed=i,
+                max_new_tokens=SPEC_NEW_TOKENS,
+            ),
+            precision,
+        )
+        for i, p in enumerate(prompts)
     ]
     engine.run()
     s = engine.stats
@@ -244,6 +250,58 @@ def spec_decode_stats(n_iters: int = 5) -> dict:
     }
 
 
+SAMPLE_TEMPERATURE = 0.8
+SAMPLE_BATCH = 8  # wider than SPEC_BATCH: decode-call compute should
+# dominate the fixed per-call sampling-array overhead the gate measures
+
+
+def sampling_stats(n_iters: int = 5) -> dict:
+    """The sampled generation workload on the synthetic-repetition prompts:
+    greedy (temperature 0) vs temperature-0.8 decode throughput, fixed-seed
+    reproducibility, and the spec-on sampled accept rate (speculative
+    rejection sampling at bf16 target / W8 draft).
+
+    Alternates greedy / sampled passes and takes best-of-N of each (min-of-N
+    per the serving bench convention on this noisy box); asserts nothing
+    itself — run.py --smoke gates sampled >= 0.9x greedy tok/s and
+    spec-sampled accept >= 0.5."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    cfg, _ = _setup()
+    motif = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    prompts = [
+        np.tile(motif, SPEC_PROMPT_LEN // len(motif))
+        for _ in range(SAMPLE_BATCH)
+    ]
+    t = SAMPLE_TEMPERATURE
+    _spec_iter(prompts, 0)  # compile warmup (discarded)
+    _spec_iter(prompts, 0, temperature=t)
+    _spec_iter(prompts, SPEC_K, temperature=t)
+    greedy_tps, sampled_tps, ratios = [], [], []
+    sampled_out = None
+    for _ in range(n_iters):
+        g_tps, _, _ = _spec_iter(prompts, 0)
+        greedy_tps.append(g_tps)
+        s_tps, _, sampled_out = _spec_iter(prompts, 0, temperature=t)
+        sampled_tps.append(s_tps)
+        # ratio per adjacent pair: the two passes see the same box load, so
+        # the best pair isolates sampling overhead from walltime noise
+        # (best-of-N convention; a cross-pair max/max ratio mixes phases)
+        ratios.append(s_tps / max(g_tps, 1e-9))
+    # reproducibility: one more sampled pass must replay the streams exactly
+    _, _, replay_out = _spec_iter(prompts, 0, temperature=t)
+    _, spec_accept, _ = _spec_iter(prompts, SPEC_K, temperature=t)
+    return {
+        "temperature": t,
+        "greedy_tok_per_s": max(greedy_tps),
+        "sampled_tok_per_s": max(sampled_tps),
+        "sampled_vs_greedy": max(ratios),
+        "seed_reproducible": float(sampled_out == replay_out),
+        "spec_sampled_accept": spec_accept,
+    }
+
+
 HEADER = "name,decode_tok_per_s,ttft_ms_p50,tok_ms_p50,tok_ms_p99,occupancy"
 
 
@@ -262,3 +320,5 @@ if __name__ == "__main__":
         print(f"shared_prefix_{k},{v:.3f}")
     for k, v in spec_decode_stats().items():
         print(f"spec_decode_{k},{v:.3f}")
+    for k, v in sampling_stats().items():
+        print(f"sampling_{k},{v:.3f}")

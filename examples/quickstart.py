@@ -14,7 +14,7 @@ from repro.core.assembler import assemble_conv
 from repro.core.dataflow import ConvLayer
 from repro.core.interpreter import run_program
 from repro.core.isa import Dataflow, disassemble
-from repro.core.perfmodel import SpeedModel, evaluate_layer, select_dataflow
+from repro.core.perfmodel import evaluate_layer, select_dataflow
 from repro.core.precision import Precision
 from repro.core.sau import pe_multiply
 from repro.kernels import ops

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import ServeEngine
+from repro.serve import PrecisionParams, SamplingParams, ServeEngine
 
 base = dataclasses.replace(
     get_config("yi-9b").reduced(), n_layers=4, d_model=256, d_ff=512,
@@ -33,14 +33,14 @@ def prompt():
 # wave 1 seeds the prefix cache: one request per (w_bits, kv_bits) group
 SEED_SPEC = [(4, 8), (8, 8), (16, 16)]
 for w, kv in SEED_SPEC:
-    engine.submit(prompt(), 12, w_bits=w, kv_bits=kv)
+    engine.submit(prompt(), SamplingParams(max_new_tokens=12), PrecisionParams(w_bits=w, kv_bits=kv))
     engine.run()
 seeded_hits = engine.stats.prefix_hit_tokens
 assert seeded_hits == 0, "disjoint precision groups must not share prefix pages"
 
 # wave 2: same mixed-precision stream, warm prefix cache per group
 SPEC = [(4, 8), (8, 8), (4, 8), (8, 8), (16, 16), (4, 8)]
-reqs = [engine.submit(prompt(), 12, w_bits=w, kv_bits=kv) for w, kv in SPEC]
+reqs = [engine.submit(prompt(), SamplingParams(max_new_tokens=12), PrecisionParams(w_bits=w, kv_bits=kv)) for w, kv in SPEC]
 engine.run()
 
 def payload_bytes(tree):
@@ -80,3 +80,36 @@ print("\n(W4+W8+bf16 requests were continuously batched in one engine; "
       "w4 halves the w8 matmul-weight payload, greedy continuations stay "
       "consistent, and the shared system prompt prefilled once per precision "
       "group — never across groups)")
+
+# --- streaming sampled generation: the generate() API ----------------------
+# per-request seeded sampling (temperature/top-p) with per-token streaming;
+# the same seed reproduces the same stream, different seeds diverge.
+from repro.serve import GenerationOutput, StreamEvent  # noqa: E402
+
+def stream(seed):
+    events, outs = [], []
+    sampling = SamplingParams(temperature=0.8, top_p=0.95, seed=seed,
+                              max_new_tokens=8)
+    for ev in engine.generate([
+        (prompt(), sampling, PrecisionParams(w_bits=4, kv_bits=8)),
+    ]):
+        if isinstance(ev, StreamEvent):
+            events.append(ev.token)
+        else:
+            outs.append(ev)
+    return events, outs
+
+rng = np.random.default_rng(42)  # reset so both calls build the same prompt
+toks_a, (out_a,) = stream(seed=7)
+rng = np.random.default_rng(42)
+toks_b, (out_b,) = stream(seed=7)
+rng = np.random.default_rng(42)
+toks_c, (out_c,) = stream(seed=8)
+
+print(f"\nstreaming sampled generation (temperature 0.8, top-p 0.95):")
+print(f"  seed 7:        {toks_a}  (finish: {out_a.finish_reason})")
+print(f"  seed 7 again:  {toks_b}")
+print(f"  seed 8:        {toks_c}")
+assert isinstance(out_a, GenerationOutput) and list(out_a.tokens) == toks_a
+assert toks_a == toks_b, "a fixed seed must reproduce the stream exactly"
+assert toks_a != toks_c, "a different seed should diverge (w.h.p.)"

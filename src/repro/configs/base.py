@@ -8,7 +8,7 @@ public-literature config; ``reduced()`` derives the CPU-smoke-test variant
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Literal, Optional
 
 Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]

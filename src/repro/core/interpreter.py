@@ -39,9 +39,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import sau as sau_mod
-from repro.core.assembler import Program, V_ACC, V_IN, V_OUT, V_WT
+from repro.core.assembler import Program, V_ACC, V_IN, V_WT
 from repro.core.isa import VSACFG, VSALD, VSAM, Dataflow, decode
-from repro.core.precision import Precision
 
 __all__ = ["Machine", "run_program"]
 

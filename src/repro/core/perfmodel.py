@@ -23,7 +23,7 @@ mixed > either, SPEED >> Ara, 4-bit ~3x 8-bit) are model outputs, not inputs.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 
 from repro.core.dataflow import (
     ConvLayer,

@@ -28,7 +28,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.precision import PE_MULTIPLIERS_4B, Precision

@@ -17,7 +17,6 @@ with-tolerance vs the exact psum.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

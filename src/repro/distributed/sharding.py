@@ -16,7 +16,7 @@ no-ops so the model runs unmodified on CPU.
 from __future__ import annotations
 
 import re
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -35,6 +35,10 @@ __all__ = [
     "paged_mqa_decode",
     "paged_mqa_prefill",
     "paged_mqa_verify",
+    "sample_keys",
+    "sampling_probs",
+    "sample_from_probs",
+    "sample_tokens",
 ]
 
 _INT_DTYPE = {4: jnp.int8, 8: jnp.int8, 16: jnp.int16}
@@ -400,6 +404,168 @@ def paged_mqa_prefill(
             interpret=interpret,
         )
     return out.transpose(0, 2, 1, 3, 4).reshape(b, c, h, d)
+
+
+# --------------------------------------------------------------- sampling ops
+# Seeded stochastic sampling for the serving engine.  All four ops are
+# row-batched (every request in a decode group carries its own temperature /
+# top_k / top_p / PRNG key), run inside the engine's jitted hot paths, and
+# reduce EXACTLY to greedy argmax when temperature <= 0 — the engine's
+# recompute-on-preemption invariant and the greedy golden streams depend on
+# that.  Keys are derived as fold_in(fold_in(PRNGKey(seed), position), salt),
+# so the token emitted at stream position p depends only on (seed, p) — never
+# on batch composition, bucketing, or how many times the request was
+# preempted and replayed.
+
+
+def sample_keys(seeds: jnp.ndarray, positions: jnp.ndarray, salt: int = 0):
+    """[B] seeds + [B] stream positions -> [B, 2] per-row PRNG keys.
+
+    ``salt`` separates the independent draws one emission position needs
+    (serve/spec_decode.py uses distinct salts for the draft sample, the
+    accept uniform and the residual resample at the same position).
+    """
+    def mk(s, p):
+        k = jax.random.PRNGKey(s)
+        k = jax.random.fold_in(k, p)
+        return jax.random.fold_in(k, salt)
+
+    return jax.vmap(mk)(
+        jnp.asarray(seeds, jnp.uint32), jnp.asarray(positions, jnp.int32)
+    )
+
+
+def _top_kp_mask(
+    logits: jnp.ndarray, top_k: jnp.ndarray, top_p: jnp.ndarray
+) -> jnp.ndarray:
+    """[B, V] keep-mask: top-k by logit rank, then nucleus top-p on the
+    renormalized surviving distribution (HF warper order).  top_k <= 0 and
+    top_p >= 1 disable their stage; the most probable token always survives.
+    One descending argsort drives both stages (sorted-domain ranks and
+    cumulative mass), scattered back to vocab order at the end.
+    """
+    b, v = logits.shape
+    k = jnp.clip(jnp.where(top_k > 0, top_k, v), 1, v)
+    order = jnp.argsort(logits, axis=-1)[:, ::-1]  # descending
+    sl = jnp.take_along_axis(logits, order, axis=-1)
+    ranks = jnp.arange(v, dtype=jnp.int32)[None, :]
+    keep_k = ranks < k[:, None]
+    probs = jax.nn.softmax(jnp.where(keep_k, sl, -jnp.inf), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep the smallest prefix reaching top_p: a token survives while the
+    # mass *before* it is still short of top_p (the first always is).  At
+    # the disabled value top_p >= 1 keep everything explicitly — f32 tail
+    # mass can round `cum - probs` up to exactly 1.0, which the strict
+    # `< 1.0` test would mask, breaking the elided==masked equivalence
+    keep_p = ((cum - probs) < top_p[:, None]) | (top_p[:, None] >= 1.0)
+    keep = keep_k & keep_p
+    rows = jnp.arange(b)
+    return jnp.zeros((b, v), bool).at[rows[:, None], order].set(keep)
+
+
+def _masked_logits(logits, top_k, top_p):
+    """Apply the top-k/top-p mask; ``top_k=None`` / ``top_p=None`` elide the
+    corresponding stage STATICALLY — a temperature-only sampling graph never
+    pays the vocab argsort (the engine passes None when no row in a group
+    uses the knob)."""
+    if top_k is None and top_p is None:
+        return logits
+    b = logits.shape[0]
+    if top_k is None:
+        top_k = jnp.zeros(b, jnp.int32)
+    if top_p is None:
+        top_p = jnp.ones(b, jnp.float32)
+    return jnp.where(_top_kp_mask(logits, top_k, top_p), logits, -jnp.inf)
+
+
+def sampling_probs(
+    logits: jnp.ndarray,  # [B, V] f32
+    temperature: jnp.ndarray,  # [B] f32; <= 0 means greedy
+    top_k=None,  # [B] i32 (<= 0 disables) or None (statically disabled)
+    top_p=None,  # [B] f32 (>= 1 disables) or None (statically disabled)
+) -> jnp.ndarray:
+    """[B, V] exact per-row sampling distribution after top-k -> top-p ->
+    temperature: softmax(masked_logits / temperature), a one-hot at the raw
+    argmax for greedy rows.  This is the distribution ``sample_tokens`` draws
+    from, and what speculative rejection sampling uses for the accept ratio
+    and residual (serve/spec_decode.py)."""
+    greedy = temperature <= 0.0
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    probs = jax.nn.softmax(_masked_logits(logits, top_k, top_p) / t, axis=-1)
+    onehot = jax.nn.one_hot(
+        jnp.argmax(logits, axis=-1), logits.shape[-1], dtype=probs.dtype
+    )
+    return jnp.where(greedy[:, None], onehot, probs)
+
+
+def _inverse_cdf(probs: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """[B, V] probs + [B] uniforms -> [B] sampled indices.
+
+    Two-level search: block partial sums (one O(V) pass), a cumsum over the
+    ~sqrt(V) block totals, then a cumsum inside the one selected block per
+    row.  A flat jnp.cumsum over the vocab axis lowers to an O(V^2)-ish
+    reduce-window on CPU XLA (hundreds of us at V=1024 — comparable to a
+    small model's whole decode step); the blocked form keeps in-jit sampling
+    a <10% overhead on the serving hot path.  Probs needn't be normalized
+    (the threshold is scaled by the row total); zero-probability tokens are
+    never drawn, so a one-hot row deterministically returns its hot index.
+    """
+    b, v = probs.shape
+    nb = 1 << ((v - 1).bit_length() + 1) // 2  # ~sqrt(V), power of two
+    pad = (-v) % nb
+    if pad:
+        probs = jnp.pad(probs, ((0, 0), (0, pad)))
+    vb = probs.shape[1] // nb
+    pb = probs.reshape(b, nb, vb)
+    cb = jnp.cumsum(jnp.sum(pb, axis=-1), axis=-1)  # [B, nb] block cdf
+    r = u * cb[:, -1]  # [B] threshold in un-normalized mass
+    blk = jnp.clip(jnp.sum(cb <= r[:, None], axis=-1), 0, nb - 1)
+    base = jnp.where(
+        blk > 0,
+        jnp.take_along_axis(cb, jnp.maximum(blk - 1, 0)[:, None], 1)[:, 0],
+        0.0,
+    )
+    sub = jnp.take_along_axis(pb, blk[:, None, None], axis=1)[:, 0]  # [B, vb]
+    cs = base[:, None] + jnp.cumsum(sub, axis=-1)
+    off = jnp.clip(jnp.sum(cs <= r[:, None], axis=-1), 0, vb - 1)
+    return jnp.clip(blk * vb + off, 0, v - 1).astype(jnp.int32)
+
+
+def sample_from_probs(probs: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Categorical draw per row: [B, V] probs + [B, 2] keys -> [B] int32.
+
+    Inverse-CDF with ONE scalar uniform per row — a per-row gumbel field
+    would draw B*V PRNG variates, which dominates a small model's decode
+    step on CPU.  Zero-probability tokens are never drawn, and a one-hot row
+    (greedy) deterministically returns its hot index whatever the key says."""
+    u = jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+    return _inverse_cdf(probs, u)
+
+
+def sample_tokens(
+    logits: jnp.ndarray,  # [B, V] f32
+    keys: jnp.ndarray,  # [B, 2] per-row keys (see sample_keys)
+    temperature: jnp.ndarray,  # [B] f32; <= 0 means greedy
+    top_k=None,  # [B] i32 (<= 0 disables) or None (statically disabled)
+    top_p=None,  # [B] f32 (>= 1 disables) or None (statically disabled)
+) -> jnp.ndarray:
+    """[B] int32 next tokens: greedy rows are the exact raw argmax (bit-equal
+    to the pre-sampling engine), sampled rows draw from exactly
+    :func:`sampling_probs`' distribution (inverse-CDF over the masked scaled
+    softmax, one uniform per row).  The masked and mask-elided graphs draw
+    identical tokens for rows whose top_k/top_p are at their disabled values
+    (the mask keeps everything and the uniform is key-determined)."""
+    greedy = temperature <= 0.0
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    masked = _masked_logits(logits, top_k, top_p)
+    # unnormalized exp suffices: _inverse_cdf scales its threshold by the
+    # row total, saving softmax's divide pass over the vocab
+    w = jnp.exp((masked - jnp.max(masked, axis=-1, keepdims=True)) / t)
+    u = jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+    sampled = _inverse_cdf(w, u)
+    return jnp.where(
+        greedy, jnp.argmax(logits, axis=-1), sampled
+    ).astype(jnp.int32)
 
 
 def paged_mqa_verify(*args, **kwargs) -> jnp.ndarray:

@@ -10,12 +10,27 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "gather_pages",
     "mpmm_ref",
     "mpconv_ref",
     "mqa_decode_ref",
     "paged_mqa_decode_ref",
     "paged_mqa_prefill_ref",
 ]
+
+
+def gather_pages(pool: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """[L, P, ps, ...] paged pool + [B, W] page tables -> [L, B, W*ps, ...]
+    contiguous cache rows.
+
+    The gather oracle for the paged layout: the kernels index the pool in
+    place, so nothing on a hot path materializes this view — tests and
+    benchmarks use it to compare paged attention against the dense-cache
+    oracles above.
+    """
+    g = pool[:, tables]  # [L, B, W, ps, ...]
+    l, b, w, ps = g.shape[:4]
+    return g.reshape(l, b, w * ps, *g.shape[4:])
 
 
 def _unpack_w4_k(packed: jnp.ndarray) -> jnp.ndarray:

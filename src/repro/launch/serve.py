@@ -2,7 +2,8 @@
 (the paper's use case at traffic).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
-        --requests 8 --new-tokens 16 --precision-mix 4,8 --shared-prefix 64
+        --requests 8 --new-tokens 16 --precision-mix 4,8 --shared-prefix 64 \
+        --temperature 0.8 --top-p 0.95 --seed 7
 
 ``--precision-mix`` assigns weight precisions to requests round-robin, so a
 single engine decodes W4A16 and W8A16 requests in the same step (one batched
@@ -14,22 +15,29 @@ pages and prefills only its unique tail (see the prefix_* stats in the
 output).  ``--prefill-chunk`` bounds per-step prefill work so long prompts
 interleave with running decodes; ``--no-prefix-cache`` disables reuse.
 ``--spec-k K`` turns on self-speculative decoding: every request drafts up
-to K greedy tokens per round with the cheap ``--draft-bits`` weight set and
-verifies them in one pass at its own precision (exact acceptance — output
-tokens are identical to plain decode; see spec_* stats).  ``--eos-id``
+to K tokens per round with the cheap ``--draft-bits`` weight set and
+verifies them in one pass at its own precision (exact acceptance for greedy,
+rejection sampling for sampled requests; see spec_* stats).
+
+Sampling: ``--temperature`` (0 = greedy argmax, the default), ``--top-k``,
+``--top-p`` and ``--seed`` build each request's ``SamplingParams``; request
+``i`` uses ``seed + i``, so rerunning with the same seed reproduces every
+stream exactly while distinct requests stay decorrelated.  ``--eos-id``
 terminates a request the moment it emits that token instead of always
 burning the full ``--new-tokens`` budget.
+
+Requests are driven through the streaming ``ServeEngine.generate()`` API —
+the JSON report includes per-request ``outputs`` (token prefixes) and
+``finish_reasons`` collected from the stream.
 """
 from __future__ import annotations
 
 import argparse
 import json
-
-import jax
-import numpy as np
+from typing import Optional
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -57,21 +65,50 @@ def main() -> None:
     ap.add_argument("--no-prefix-cache", action="store_true")
     ap.add_argument(
         "--spec-k", type=int, default=0, metavar="K",
-        help="speculative draft tokens per round (0 = plain greedy decode)",
+        help="speculative draft tokens per round (0 = plain decode)",
     )
     ap.add_argument(
         "--draft-bits", type=int, default=4, choices=(4, 8, 16),
         help="weight precision of the speculative draft passes",
     )
     ap.add_argument(
+        "--temperature", type=float, default=0.0,
+        help="sampling temperature (0 = greedy argmax)",
+    )
+    ap.add_argument(
+        "--top-k", type=int, default=0,
+        help="keep only the k highest logits before sampling (0 = disabled)",
+    )
+    ap.add_argument(
+        "--top-p", type=float, default=1.0,
+        help="nucleus sampling mass (1.0 = disabled)",
+    )
+    ap.add_argument(
+        "--seed", type=int, default=0,
+        help="sampling seed; request i uses seed + i, so a rerun with the "
+        "same seed reproduces every stream exactly",
+    )
+    ap.add_argument(
         "--eos-id", type=int, default=None,
         help="stop token id: requests finish on emitting it (default: none)",
     )
-    args = ap.parse_args()
+    return ap
+
+
+def main(argv: Optional[list[str]] = None) -> dict:
+    args = build_parser().parse_args(argv)
+
+    import jax
+    import numpy as np
 
     from repro.configs import get_config
     from repro.models import transformer as model_lib
-    from repro.serve import ServeEngine
+    from repro.serve import (
+        GenerationOutput,
+        PrecisionParams,
+        SamplingParams,
+        ServeEngine,
+    )
 
     arch = get_config(args.arch)
     if args.reduced:
@@ -99,7 +136,15 @@ def main() -> None:
         return np.concatenate([shared, tail])
 
     if not ServeEngine.supports(arch):
-        # recurrent-cache archs: static-wave fallback (single precision)
+        # recurrent-cache archs: static-wave fallback (single precision,
+        # greedy-only) — refuse sampling flags rather than silently
+        # reporting greedy results as sampled ones
+        if args.temperature or args.top_k or args.top_p < 1.0 or args.seed:
+            raise SystemExit(
+                f"--temperature/--top-k/--top-p/--seed are not supported for "
+                f"{arch.name} ({arch.family!r}): the static-wave fallback "
+                "decodes greedily"
+            )
         from repro.train.server import Request, Server
 
         srv = Server(
@@ -112,7 +157,7 @@ def main() -> None:
         ]
         srv.serve(reqs)
         stats = srv.stats
-        print(json.dumps({
+        report = {
             "arch": arch.name,
             "scheduler": "static-wave (family not supported by paged engine)",
             "w_bits": arch.serve_w_bits if not args.no_quantize else 16,
@@ -120,10 +165,13 @@ def main() -> None:
             "tokens_out": stats.tokens_out,
             "prefill_s": round(stats.prefill_s, 3),
             "decode_s": round(stats.decode_s, 3),
-            "decode_tok_per_s": round(stats.tokens_out / max(stats.decode_s, 1e-9), 1),
-            "sample_output": reqs[0].out_tokens[:8],
-        }, indent=1))
-        return
+            "decode_tok_per_s": round(
+                stats.tokens_out / max(stats.decode_s, 1e-9), 1
+            ),
+            "outputs": [r.out_tokens[:16] for r in reqs],
+        }
+        print(json.dumps(report, indent=1))
+        return report
 
     pages_per_slot = -(-max_len // args.page_size)
     engine = ServeEngine(
@@ -138,23 +186,42 @@ def main() -> None:
     )
     reqs = [
         engine.submit(
-            prompt(), args.new_tokens,
-            w_bits=mix[i % len(mix)],
-            kv_bits=kv_bits,
-            eos_id=args.eos_id,
+            prompt(),
+            SamplingParams(
+                temperature=args.temperature,
+                top_k=args.top_k,
+                top_p=args.top_p,
+                seed=args.seed + i,
+                max_new_tokens=args.new_tokens,
+                eos_id=args.eos_id,
+            ),
+            PrecisionParams(w_bits=mix[i % len(mix)], kv_bits=kv_bits),
         )
         for i in range(args.requests)
     ]
-    engine.run()
+    # drive through the streaming API; the terminal outputs carry the streams
+    outputs: dict[int, GenerationOutput] = {}
+    stream_events = 0
+    for ev in engine.generate(reqs):
+        if isinstance(ev, GenerationOutput):
+            outputs[ev.rid] = ev
+        else:
+            stream_events += 1
     stats = engine.stats
     ttfts = sorted(stats.ttfts)
-    print(json.dumps({
+    outs = [outputs[r.rid] for r in reqs]
+    report = {
         "arch": arch.name,
         "w_bits_mix": mix,
         "kv_bits": kv_bits,
         "requests": len(reqs),
         "shared_prefix": args.shared_prefix,
+        "temperature": args.temperature,
+        "top_k": args.top_k,
+        "top_p": args.top_p,
+        "seed": args.seed,
         "tokens_out": stats.tokens_out,
+        "stream_events": stream_events,
         "prefill_s": round(stats.prefill_s, 3),
         "prefill_chunks": stats.prefill_chunks,
         "decode_s": round(stats.decode_s, 3),
@@ -163,15 +230,20 @@ def main() -> None:
         "ttft_ms_last": round(ttfts[-1] * 1e3, 1) if ttfts else None,
         "prefix_hit_rate": round(stats.prefix_hit_rate, 3),
         "prefix_hit_tokens": stats.prefix_hit_tokens,
-        "decode_group_calls": {f"w{w}kv{k}": n for (w, k), n in stats.group_calls.items()},
+        "decode_group_calls": {
+            f"w{w}kv{k}": n for (w, k), n in stats.group_calls.items()
+        },
         "mixed_precision_steps": stats.mixed_precision_steps,
         "mean_batch_occupancy": round(stats.mean_batch_occupancy, 2),
         "preemptions": stats.preemptions,
         "spec_k": args.spec_k,
         "spec_rounds": stats.spec_rounds,
         "spec_accept_rate": round(stats.spec_accept_rate, 3),
-        "sample_output": reqs[0].out_tokens[:8],
-    }, indent=1))
+        "finish_reasons": [o.finish_reason for o in outs],
+        "outputs": [list(o.tokens[:16]) for o in outs],
+    }
+    print(json.dumps(report, indent=1))
+    return report
 
 
 if __name__ == "__main__":

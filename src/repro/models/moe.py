@@ -23,14 +23,12 @@ Routing: softmax gate, top-k, fixed per-expert capacity with token dropping
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.layers import dense
 
 
 def _positions_in_expert(eids: jnp.ndarray, n_experts: int):

@@ -10,6 +10,11 @@ decodes in a handful of batched calls instead of one model call per request.
 
 Layers (bottom-up):
 
+  * params.py       — ``SamplingParams`` / ``PrecisionParams``: the frozen
+    user-facing request knobs (how tokens are chosen vs which compute path
+    serves them).
+  * outputs.py      — ``StreamEvent`` / ``GenerationOutput``: the streaming
+    generation API's per-token and terminal outputs.
   * request.py      — ``ServeRequest`` lifecycle (WAITING → RUNNING →
     FINISHED).
   * kv_cache.py     — ``PagedKVCache``: fixed-size page pool + per-request
@@ -22,27 +27,35 @@ Layers (bottom-up):
   * prefill.py      — jit'd chunked-prefill step (cached prefixes skipped,
     ragged pow2-bucketed suffix chunks, interleaved with decode).
   * decode.py       — jit'd ragged batched decode step over the page pool.
-  * spec_decode.py  — fused self-speculative round: k greedy draft steps at
-    a cheap weight precision + one exact multi-token verify at the
-    request's target precision (bit-identical to plain greedy decode).
-  * engine.py       — ``ServeEngine`` tying it together; ``EngineStats``.
+  * spec_decode.py  — fused self-speculative round: k draft steps at a
+    cheap weight precision + one multi-token verify at the request's target
+    precision under speculative rejection sampling (bit-identical to plain
+    decode for greedy requests, distribution-exact for sampled ones).
+  * engine.py       — ``ServeEngine`` tying it together (``submit()`` +
+    streaming ``generate()``); ``EngineStats``.
 
 Entry points: ``repro.launch.serve`` (CLI), ``repro.train.server.Server``
 (compat wrapper), ``examples/serve_quantized.py``, ``benchmarks/serve_bench``.
 """
 from repro.serve.engine import EngineStats, ServeEngine
 from repro.serve.kv_cache import PagedKVCache
+from repro.serve.outputs import GenerationOutput, StreamEvent
+from repro.serve.params import PrecisionParams, SamplingParams
 from repro.serve.prefix_cache import PrefixCache, block_hashes
 from repro.serve.request import RequestState, ServeRequest
 from repro.serve.scheduler import Scheduler
 
 __all__ = [
     "EngineStats",
+    "GenerationOutput",
     "PagedKVCache",
+    "PrecisionParams",
     "PrefixCache",
     "RequestState",
+    "SamplingParams",
     "Scheduler",
     "ServeEngine",
     "ServeRequest",
+    "StreamEvent",
     "block_hashes",
 ]

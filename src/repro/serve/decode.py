@@ -27,20 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops
 from repro.models import attention as attn_mod
 from repro.models import transformer as model_lib
 from repro.models.layers import apply_rope, dense, rms_norm
-
-
-def _gather_pages(pool: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
-    """[L, P, ps, ...] pool + [B, W] page tables -> [L, B, W*ps, ...].
-
-    No longer on the per-token decode path (the paged kernel indexes the pool
-    in place); kept as the gather reference for tests and debugging.
-    """
-    g = pool[:, tables]  # [L, B, W, ps, ...]
-    l, b, w, ps = g.shape[:4]
-    return g.reshape(l, b, w * ps, *g.shape[4:])
 
 
 def paged_decode_step(
@@ -155,3 +145,38 @@ def paged_decode_step(
     logits = dense(x[:, -1], params["unembed"]).astype(jnp.float32)
     logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30)
     return logits, pools
+
+
+def paged_decode_sample(
+    params,
+    tokens: jnp.ndarray,  # [B, 1] int32 — last generated token per request
+    lengths: jnp.ndarray,  # [B] int32 — tokens already in cache
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    valid: jnp.ndarray,  # [B] bool — False for pow2-bucket padding rows
+    samp,  # (temperature [B], top_k [B], top_p [B], seed [B], position [B])
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    pool_ks,
+    pool_vs,
+    *,
+    cfg: ArchConfig,
+    mesh=None,
+):
+    """One decode step *and* the next-token choice, fused in one jitted
+    graph: runs :func:`paged_decode_step`, then draws each row's next token
+    with its own (temperature, top_k, top_p) under the position-keyed PRNG
+    (``kernels/ops.py::sample_tokens``; greedy rows are exact argmax).
+    ``samp is None`` means the whole group is greedy — the graph is the bare
+    argmax, identical to the pre-sampling engine, paying zero sampling
+    compute; ``top_k``/``top_p`` may likewise be None inside the tuple when
+    no row in the group uses them (the mask sorts are elided statically).
+    Returns (next_tokens [B] int32, new_pools)."""
+    logits, pools = paged_decode_step(
+        params, tokens, lengths, tables, valid,
+        pool_k, pool_v, pool_ks, pool_vs, cfg=cfg, mesh=mesh,
+    )
+    if samp is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
+    temps, top_ks, top_ps, seeds, positions = samp
+    keys = ops.sample_keys(seeds, positions)
+    return ops.sample_tokens(logits, keys, temps, top_ks, top_ps), pools

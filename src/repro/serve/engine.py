@@ -46,11 +46,25 @@ One engine step:
      and rejected tail pages roll back to the pool via
      ``PagedKVCache.truncate``.
 
-A request finishes on its token budget OR the moment it emits its
-``eos_id``/``stop_tokens`` (prefill, plain decode, and mid-verify-window
-alike).  A request whose context (prompt + max_new_tokens) could never fit
-its page pool is FAILED at submit/admission with a clear error instead of
-being allowed to preempt-readmit-livelock the engine.
+**Generation API** (serve/params.py, serve/outputs.py): ``submit(prompt,
+SamplingParams, PrecisionParams)`` enqueues a request; ``generate()``
+streams one ``StreamEvent`` per emitted token plus a terminal
+``GenerationOutput`` per request.  Every hot path ends in the shared
+position-keyed sampling op (``kernels/ops.py::sample_tokens``) inside the
+same jitted graph as the model step: per-row temperature/top-k/top-p with
+keys ``fold_in(PRNGKey(seed), position)``, so sampled streams are
+reproducible under a fixed seed regardless of batch composition, bucketing
+or preemption — and ``temperature == 0`` rows are exact argmax, bit-equal
+to greedy decode.  Speculative rounds run speculative *rejection* sampling
+(serve/spec_decode.py), which preserves the target distribution for sampled
+requests and collapses to exact-equality acceptance for greedy ones.
+
+A request finishes on its token budget (``finish_reason == "length"``) OR
+the moment it emits its ``eos_id``/``stop_tokens`` (``"stop"`` — prefill,
+plain decode, and mid-verify-window alike).  A request whose context
+(prompt + max_new_tokens) could never fit its page pool is FAILED
+(``"failed"``) at submit/admission with a clear error instead of being
+allowed to preempt-readmit-livelock the engine.
 
 Requests never wait for batch-mates: a request admitted at step N starts
 prefilling at step N alongside requests decoding since long before.
@@ -64,18 +78,33 @@ import collections
 import dataclasses
 import functools
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Iterable, Iterator, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops
 from repro.models import transformer as model_lib
-from repro.serve.decode import paged_decode_step
+from repro.serve.decode import paged_decode_sample
 from repro.serve.kv_cache import PagedKVCache
-from repro.serve.prefill import bucket_pow2, chunk_prefill_step
+from repro.serve.outputs import (
+    FINISH_FAILED,
+    FINISH_LENGTH,
+    FINISH_STOP,
+    GenerationOutput,
+    StreamEvent,
+)
+from repro.serve.params import (
+    LEGACY_PRECISION_KWARGS,
+    LEGACY_SAMPLING_KWARGS,
+    PrecisionParams,
+    SamplingParams,
+)
+from repro.serve.prefill import bucket_pow2, chunk_prefill_sample
 from repro.serve.prefix_cache import PrefixCache, block_hashes
 from repro.serve.request import RequestState, ServeRequest
 from repro.serve.scheduler import Scheduler
@@ -89,30 +118,35 @@ def _make_jits(mesh):
     hashable jit statics, so it rides in the closure).  The four pool
     arguments of decode/chunk/spec are donated so their in-kernel K/V
     scatters run in place — keep ``donate_argnums`` in sync with the lambda
-    signatures here, the single place they are spelled."""
+    signatures here, the single place they are spelled.  ``samp`` is the
+    per-row sampling-parameter tuple (temperature, top_k, top_p, seed,
+    position) every hot path now ends in: the next-token draw happens inside
+    the same jitted graph as the model step, never host-side."""
     prefill = functools.partial(jax.jit, static_argnames=("cfg", "max_len"))(
         lambda p, b, cfg, max_len: model_lib.prefill(p, b, cfg, max_len, mesh)
     )
     decode = functools.partial(
-        jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
+        jax.jit, static_argnames=("cfg",), donate_argnums=(6, 7, 8, 9)
     )(
-        lambda p, t, ln, tb, vl, pk, pv, pks, pvs, cfg: paged_decode_step(
-            p, t, ln, tb, vl, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
+        lambda p, t, ln, tb, vl, samp, pk, pv, pks, pvs, cfg:
+        paged_decode_sample(
+            p, t, ln, tb, vl, samp, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
         )
     )
     chunk = functools.partial(
-        jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6, 7, 8)
+        jax.jit, static_argnames=("cfg",), donate_argnums=(6, 7, 8, 9)
     )(
-        lambda p, t, qs, ql, tb, pk, pv, pks, pvs, cfg: chunk_prefill_step(
-            p, t, qs, ql, tb, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
+        lambda p, t, qs, ql, tb, samp, pk, pv, pks, pvs, cfg:
+        chunk_prefill_sample(
+            p, t, qs, ql, tb, samp, pk, pv, pks, pvs, cfg=cfg, mesh=mesh
         )
     )
     spec = functools.partial(
-        jax.jit, static_argnames=("cfg", "spec_k"), donate_argnums=(7, 8, 9, 10)
+        jax.jit, static_argnames=("cfg", "spec_k"), donate_argnums=(8, 9, 10, 11)
     )(
-        lambda dp, p, t, ln, tb, vl, nd, pk, pv, pks, pvs, cfg, spec_k:
+        lambda dp, p, t, ln, tb, vl, nd, samp, pk, pv, pks, pvs, cfg, spec_k:
         spec_decode_round(
-            dp, p, t, ln, tb, vl, nd, pk, pv, pks, pvs,
+            dp, p, t, ln, tb, vl, nd, samp, pk, pv, pks, pvs,
             cfg=cfg, spec_k=spec_k, mesh=mesh,
         )
     )
@@ -286,33 +320,77 @@ class ServeEngine:
         return ("w", req.w_bits)
 
     # ---------------------------------------------------------------- submit
+    def _legacy_submit_params(
+        self, max_new_tokens, sampling, precision, legacy
+    ) -> tuple[SamplingParams, PrecisionParams]:
+        """Deprecated-kwargs shim: ``submit(prompt, 16, w_bits=4, ...)``
+        still works, warning once per call, by packing the flat kwargs into
+        the structured types.  Mixing a structured param with flat kwargs
+        that belong inside it is an error, not a silent merge."""
+        warnings.warn(
+            "ServeEngine.submit(prompt, max_new_tokens, **flat_kwargs) is "
+            "deprecated; pass submit(prompt, SamplingParams(...), "
+            "PrecisionParams(...)) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        unknown = set(legacy) - LEGACY_SAMPLING_KWARGS - LEGACY_PRECISION_KWARGS
+        if unknown:
+            raise TypeError(f"submit() got unexpected kwargs {sorted(unknown)}")
+        samp_kw = {k: v for k, v in legacy.items() if k in LEGACY_SAMPLING_KWARGS}
+        prec_kw = {k: v for k, v in legacy.items() if k in LEGACY_PRECISION_KWARGS}
+        if max_new_tokens is not None:
+            samp_kw["max_new_tokens"] = int(max_new_tokens)
+        if sampling is not None and samp_kw:
+            raise TypeError(
+                f"pass {sorted(samp_kw)} inside SamplingParams, not alongside it"
+            )
+        if precision is not None and prec_kw:
+            raise TypeError(
+                f"pass {sorted(prec_kw)} inside PrecisionParams, not alongside it"
+            )
+        sampling = sampling if sampling is not None else SamplingParams(**samp_kw)
+        precision = (
+            precision if precision is not None else PrecisionParams(**prec_kw)
+        )
+        return sampling, precision
+
     def submit(
         self,
         prompt: np.ndarray,
-        max_new_tokens: int,
+        sampling: Optional[Union[SamplingParams, int]] = None,
+        precision: Optional[PrecisionParams] = None,
         *,
-        w_bits: Optional[int] = None,
-        kv_bits: Optional[int] = None,
-        eos_id: Optional[int] = None,
-        stop_tokens: tuple[int, ...] = (),
-        spec_k: Optional[int] = None,
-        draft_bits: Optional[int] = None,
         rid: Optional[int] = None,
+        **legacy,
     ) -> ServeRequest:
-        w_bits = self.cfg.serve_w_bits if w_bits is None else w_bits
-        kv_bits = self.cfg.serve_kv_bits if kv_bits is None else kv_bits
-        spec_k = self.spec_k if spec_k is None else spec_k
-        draft_bits = self.draft_bits if draft_bits is None else draft_bits
-        if w_bits not in (4, 8, 16):
-            raise ValueError(f"w_bits must be 4, 8 or 16, got {w_bits}")
-        if kv_bits not in (4, 8, 16):
-            raise ValueError(f"kv_bits must be 4, 8 or 16, got {kv_bits}")
-        if draft_bits not in (4, 8, 16):
-            raise ValueError(f"draft_bits must be 4, 8 or 16, got {draft_bits}")
-        if spec_k < 0:
-            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
-        if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+        """Enqueue one request: ``submit(prompt, SamplingParams(...),
+        PrecisionParams(...))``.  Omitted params take the engine defaults
+        (greedy, 16 tokens; the engine's configured precisions).  The old
+        flat signature ``submit(prompt, max_new_tokens, w_bits=..., ...)``
+        still works through a DeprecationWarning shim."""
+        if isinstance(sampling, (int, np.integer)) or legacy:
+            max_new = sampling if isinstance(sampling, (int, np.integer)) else None
+            sampling = None if max_new is not None else sampling
+            sampling, precision = self._legacy_submit_params(
+                max_new, sampling, precision, legacy
+            )
+        sampling = SamplingParams() if sampling is None else sampling
+        precision = PrecisionParams() if precision is None else precision
+        w_bits = (
+            self.cfg.serve_w_bits if precision.w_bits is None else precision.w_bits
+        )
+        kv_bits = (
+            self.cfg.serve_kv_bits
+            if precision.kv_bits is None
+            else precision.kv_bits
+        )
+        spec_k = self.spec_k if precision.spec_k is None else precision.spec_k
+        draft_bits = (
+            self.draft_bits
+            if precision.draft_bits is None
+            else precision.draft_bits
+        )
         if rid is not None:
             live = {
                 r.rid for r in (*self._sched.waiting, *self._sched.running)
@@ -322,13 +400,17 @@ class ServeEngine:
         req = ServeRequest(
             rid=self._next_rid if rid is None else rid,
             prompt=np.asarray(prompt, np.int32),
-            max_new_tokens=max_new_tokens,
+            max_new_tokens=sampling.max_new_tokens,
             w_bits=w_bits,
             kv_bits=kv_bits,
-            eos_id=eos_id,
-            stop_tokens=tuple(int(t) for t in stop_tokens),
+            eos_id=sampling.eos_id,
+            stop_tokens=sampling.stop_tokens,
             spec_k=spec_k,
             draft_bits=draft_bits,
+            temperature=sampling.temperature,
+            top_k=sampling.top_k,
+            top_p=sampling.top_p,
+            seed=sampling.seed,
             arrival=self._next_arrival,
             submit_ts=time.perf_counter(),
         )
@@ -354,6 +436,7 @@ class ServeEngine:
             self._sched.waiting.remove(req)
         req.state = RequestState.FAILED
         req.error = msg
+        req.finish_reason = FINISH_FAILED
         self._block_hashes.pop(req.rid, None)
         self.stats.failed += 1
         self.finished.append(req)
@@ -472,6 +555,45 @@ class ServeEngine:
             self._chunk_group(reqs, chunk)
         self.stats.prefill_s += time.perf_counter() - t0
 
+    def _samp_arrays(self, reqs: list[ServeRequest], bsz: int):
+        """Per-row (temperature, top_k, top_p, seed, position) arrays for a
+        bucketed group call — or ``None`` when the whole group is greedy, so
+        the jitted graph is the bare pre-sampling argmax (zero sampling
+        compute; greedy is the default and the common case).  ``top_k`` /
+        ``top_p`` entries are likewise ``None`` when no row in the group
+        uses them: the vocab argsort the mask needs is elided statically
+        (temperature-only sampling costs one gumbel field).  The elided and
+        full graphs draw identical tokens for any given row, so grouping
+        stays invisible to the stream.
+
+        ``position`` is each request's next emission index
+        (= len(out_tokens)) — the PRNG key coordinate that makes sampled
+        streams batch-composition and preemption independent.  Padding rows
+        stay temperature 0 (greedy argmax of garbage logits, sliced off by
+        the caller)."""
+        if all(r.greedy for r in reqs):
+            return None
+        temps = np.zeros(bsz, np.float32)
+        top_ks = np.zeros(bsz, np.int32)
+        top_ps = np.ones(bsz, np.float32)
+        seeds = np.zeros(bsz, np.uint32)
+        positions = np.zeros(bsz, np.int32)
+        for i, r in enumerate(reqs):
+            temps[i] = r.temperature
+            top_ks[i] = r.top_k
+            top_ps[i] = r.top_p
+            seeds[i] = r.seed
+            positions[i] = len(r.out_tokens)
+        # numpy, not device arrays: the jitted call transfers them with its
+        # other host operands instead of five eager device_puts per step
+        return (
+            temps,
+            top_ks if any(r.top_k > 0 for r in reqs) else None,
+            top_ps if any(r.top_p < 1.0 for r in reqs) else None,
+            seeds,
+            positions,
+        )
+
     def _chunk_group(self, reqs: list[ServeRequest], chunk: int) -> None:
         w_bits, kv_bits = reqs[0].w_bits, reqs[0].kv_bits
         cache = self.cache_for(kv_bits)
@@ -479,7 +601,7 @@ class ServeEngine:
         rids = [r.rid for r in reqs]
         n = len(reqs)
         # pow2-bucket the batch dimension like decode does: padding rows have
-        # q_len 0, so they scatter nothing and their logits are sliced off
+        # q_len 0, so they scatter nothing and their tokens are sliced off
         bsz = bucket_pow2(n)
         tokens = np.zeros((bsz, chunk), np.int32)
         q_start = np.zeros(bsz, np.int32)
@@ -493,15 +615,15 @@ class ServeEngine:
         width = bucket_pow2(width)  # pow2-bucket to limit retraces
         tables = np.zeros((bsz, width), np.int32)
         tables[:n] = cache.table_array(rids, width)
-        logits, new_pools = self._chunk_fn(
+        first_tok, new_pools = self._chunk_fn(
             self.params_for(w_bits), jnp.asarray(tokens), jnp.asarray(q_start),
-            jnp.asarray(q_lens), jnp.asarray(tables),
+            jnp.asarray(q_lens), jnp.asarray(tables), self._samp_arrays(reqs, bsz),
             cache.k, cache.v, cache.k_scale, cache.v_scale, cfg=cfg_g,
         )
-        jax.block_until_ready(logits)
+        jax.block_until_ready(first_tok)
         cache.set_pools(*new_pools)  # chunk K/V scattered in-kernel
         self.stats.prefill_chunks += 1
-        first = np.asarray(jnp.argmax(logits, axis=-1))
+        first = np.asarray(first_tok)
         for i, req in enumerate(reqs):
             req.cache_len += int(q_lens[i])
             if not self._prefilling(req):
@@ -575,7 +697,19 @@ class ServeEngine:
             batch["prefix_emb"] = prefix_embeddings(self.cfg, len(reqs))
         logits, kv = self._prefill_fn(self.params_for(w_bits), batch, cfg_g, max_len)
         jax.block_until_ready(logits)
-        first = np.asarray(jnp.argmax(logits, axis=-1))
+        # legacy one-shot prefill samples on the returned logits (still a
+        # jitted op — ops.sample_tokens — just not fused into the prefill)
+        samp = self._samp_arrays(reqs, len(reqs))
+        if samp is None:
+            first = np.asarray(jnp.argmax(logits, axis=-1))
+        else:
+            temps, top_ks, top_ps, seeds, positions = samp
+            first = np.asarray(
+                ops.sample_tokens(
+                    logits, ops.sample_keys(seeds, positions),
+                    temps, top_ks, top_ps,
+                )
+            )
         for i, req in enumerate(reqs):
             cache.allocate(req.rid, cache.pages_for(plen))
             if cache.quantized:
@@ -636,6 +770,15 @@ class ServeEngine:
         self.stats.preemptions += 1
 
     def _finish(self, req: ServeRequest) -> None:
+        # a stop token is always the stream's last token (decode finishes on
+        # emission, spec windows are clipped right after it), so the reason
+        # is readable off the tail; "stop" wins when the budget's final
+        # token happens to be a stop token
+        req.finish_reason = (
+            FINISH_STOP
+            if req.out_tokens and req.is_stop(req.out_tokens[-1])
+            else FINISH_LENGTH
+        )
         self._release_pages(req)
         self._sched.finish(req)
         self.finished.append(req)
@@ -695,15 +838,16 @@ class ServeEngine:
         n_real = len(reqs)
         tokens, lengths, tables, valid = self._batch_arrays(cache, reqs)
         t_call = time.perf_counter()
-        logits, new_pools = self._decode_fn(
+        sampled, new_pools = self._decode_fn(
             self.params_for(w_bits), jnp.asarray(tokens),
             jnp.asarray(lengths), jnp.asarray(tables), jnp.asarray(valid),
+            self._samp_arrays(reqs, len(valid)),
             cache.k, cache.v, cache.k_scale, cache.v_scale, cfg=cfg_g,
         )
-        jax.block_until_ready(logits)
+        jax.block_until_ready(sampled)
         self.stats.decode_call_s.append(time.perf_counter() - t_call)
         cache.set_pools(*new_pools)  # new tokens scattered in-kernel
-        next_tok = np.asarray(jnp.argmax(logits[:n_real], axis=-1))
+        next_tok = np.asarray(sampled[:n_real])
         for i, req in enumerate(reqs):
             req.cache_len += 1
             tok = int(next_tok[i])
@@ -721,9 +865,10 @@ class ServeEngine:
         kv_bits: int,
     ) -> None:
         """One fused speculative round for a same-precision group: draft
-        ``spec_k`` tokens at ``draft_bits``, verify the window at ``w_bits``,
-        emit the exactly-accepted prefix + the verify's bonus token, then
-        roll rejected tail pages back to the pool."""
+        ``spec_k`` tokens at ``draft_bits``, verify the window at ``w_bits``
+        under rejection sampling (exact equality for greedy rows), emit the
+        accepted prefix + the resample/bonus token, then roll rejected tail
+        pages back to the pool."""
         reqs.sort(key=lambda r: r.arrival)
         cache = self.cache_for(kv_bits)
         cfg_g = self._group_cfg(kv_bits)
@@ -743,31 +888,35 @@ class ServeEngine:
         nd = np.zeros(len(valid), np.int32)
         nd[:n_real] = n_draft
         t_call = time.perf_counter()
-        tgt, accept, new_pools = self._spec_fn(
+        emit, accept, new_pools = self._spec_fn(
             self.params_for(draft_bits), self.params_for(w_bits),
             jnp.asarray(tokens), jnp.asarray(lengths), jnp.asarray(tables),
             jnp.asarray(valid), jnp.asarray(nd),
+            self._samp_arrays(reqs, len(valid)),
             cache.k, cache.v, cache.k_scale, cache.v_scale,
             cfg=cfg_g, spec_k=spec_k,
         )
-        jax.block_until_ready(tgt)
+        jax.block_until_ready(emit)
         self.stats.decode_call_s.append(time.perf_counter() - t_call)
         cache.set_pools(*new_pools)  # draft K/V overwritten by verify K/V
-        tgt_np = np.asarray(tgt)
+        emit_np = np.asarray(emit)
         accept_np = np.asarray(accept)
         for i, req in enumerate(reqs):
             n_acc = int(accept_np[i])
-            emitted = [int(t) for t in tgt_np[i, : n_acc + 1]]
+            emitted = [int(t) for t in emit_np[i, : n_acc + 1]]
             emitted, stopped = clip_stop(req, emitted)
             req.out_tokens.extend(emitted)
             req.cache_len += len(emitted)
             self.stats.tokens_out += len(emitted)
             self.stats.spec_draft_tokens += int(n_draft[i])
+            req.spec_drafted += int(n_draft[i])
             # count only accepted drafts the request actually used: a
             # mid-window stop token discards the accepted tail, and an
             # accept rate the emission didn't cash in would overstate the
             # CI-gated metric on eos-heavy workloads
-            self.stats.spec_accepted_tokens += min(len(emitted) - 1, n_acc)
+            used_acc = min(len(emitted) - 1, n_acc)
+            self.stats.spec_accepted_tokens += used_acc
+            req.spec_accepted += used_acc
             # rollback: drop pages holding only rejected-window positions
             self._truncate_tail(req)
             if stopped or len(req.out_tokens) >= req.max_new_tokens:
@@ -825,3 +974,64 @@ class ServeEngine:
                     f"{ {b: c.num_allocatable for b, c in self._caches.items()} })"
                 )
         return self.finished
+
+    def generate(
+        self,
+        requests: Optional[Iterable] = None,
+    ) -> Iterator[Union[StreamEvent, GenerationOutput]]:
+        """Streaming generation: drive the engine and yield one
+        ``StreamEvent`` per emitted token, then the terminal
+        ``GenerationOutput`` of each request as it finishes — callers no
+        longer hand-roll the ``step()`` loop.
+
+        ``requests`` may mix already-submitted ``ServeRequest`` handles with
+        ``(prompt, sampling[, precision])`` tuples or bare prompts, which
+        are submitted here; ``None`` streams everything currently enqueued.
+        Tokens are yielded in emission order the moment the engine step that
+        produced them completes, so a consumer streams one request's tokens
+        while its batch-mates are still decoding.  Events are append-only
+        across preemptions (recompute replays cache state, never emissions).
+        """
+        if requests is None:
+            track = [*self._sched.waiting, *self._sched.running]
+        else:
+            track = []
+            for r in requests:
+                if isinstance(r, ServeRequest):
+                    track.append(r)
+                elif isinstance(r, (tuple, list)):
+                    track.append(self.submit(*r))
+                else:
+                    track.append(self.submit(r))
+        streamed = {r.rid: 0 for r in track}
+        pending = {r.rid for r in track}
+
+        def drain(req: ServeRequest):
+            terminal = req.done or req.failed
+            while streamed[req.rid] < len(req.out_tokens):
+                i = streamed[req.rid]
+                streamed[req.rid] = i + 1
+                last = terminal and streamed[req.rid] == len(req.out_tokens)
+                yield StreamEvent(
+                    rid=req.rid,
+                    token=req.out_tokens[i],
+                    index=i,
+                    finish_reason=req.finish_reason if last else None,
+                )
+            if terminal:
+                pending.discard(req.rid)
+                yield GenerationOutput.from_request(req)
+
+        # anything already emitted before generate() was called (e.g. a
+        # handle from a partially-driven engine) streams out first
+        for req in track:
+            yield from drain(req)
+        while pending:
+            if not self.step():
+                raise RuntimeError(
+                    "engine stalled: no request can be admitted (free pages: "
+                    f"{ {b: c.num_allocatable for b, c in self._caches.items()} })"
+                )
+            for req in track:
+                if req.rid in pending:
+                    yield from drain(req)

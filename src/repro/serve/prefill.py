@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops
 from repro.models import attention as attn_mod
 from repro.models import transformer as model_lib
 from repro.models.layers import apply_rope, dense, rms_norm
@@ -188,3 +189,37 @@ def chunk_prefill_step(
     logits = dense(last, params["unembed"]).astype(jnp.float32)
     logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30)
     return logits, pools
+
+
+def chunk_prefill_sample(
+    params,
+    tokens: jnp.ndarray,  # [B, C] int32 — this chunk's tokens (tail-padded)
+    q_start: jnp.ndarray,  # [B] int32 — tokens already materialized per row
+    q_lens: jnp.ndarray,  # [B] int32 — valid tokens of this chunk (<= C)
+    tables: jnp.ndarray,  # [B, W] int32 page tables (zero-padded)
+    samp,  # (temperature [B], top_k [B], top_p [B], seed [B], position [B])
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    pool_ks,
+    pool_vs,
+    *,
+    cfg: ArchConfig,
+    mesh=None,
+):
+    """One prefill chunk *and* the first-token choice, fused in one jitted
+    graph: :func:`chunk_prefill_step` for the logits at each row's last
+    valid position, then a per-row position-keyed draw
+    (``kernels/ops.py::sample_tokens``; greedy rows are exact argmax).  Only
+    rows whose prompt completes this chunk use their token — the engine
+    discards the rest.  ``samp is None`` (all-greedy group) compiles to the
+    bare argmax graph; None ``top_k``/``top_p`` entries elide the mask sorts
+    statically.  Returns (first_tokens [B] int32, new_pools)."""
+    logits, pools = chunk_prefill_step(
+        params, tokens, q_start, q_lens, tables,
+        pool_k, pool_v, pool_ks, pool_vs, cfg=cfg, mesh=mesh,
+    )
+    if samp is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
+    temps, top_ks, top_ps, seeds, positions = samp
+    keys = ops.sample_keys(seeds, positions)
+    return ops.sample_tokens(logits, keys, temps, top_ks, top_ps), pools

@@ -3,29 +3,38 @@
 A request carries its own precision choice — ``w_bits`` selects which
 quantized weight set (W4/W8 via ``models.transformer.quantize_params``, 16 =
 raw bf16) its kernel calls run against, ``kv_bits`` selects the KV-cache
-payload (8 = int8 + per-(token, head) scales, 16 = bf16).  The engine groups
+payload (4/8 = int + per-(token, head) scales, 16 = bf16).  The engine groups
 same-``group_key`` requests into one batched kernel call per decode step.
+The user-facing structured forms of these knobs are
+``serve/params.py::SamplingParams`` / ``PrecisionParams``; the engine
+flattens them onto the request at ``submit()`` so grouping and the jitted
+hot paths read plain fields.
 
 ``spec_k > 0`` opts the request into **self-speculative decoding**: each
-engine round drafts up to ``spec_k`` greedy tokens with the cheap
-``draft_bits`` weight set and verifies them in one multi-token pass at the
-request's own ``w_bits`` (serve/spec_decode.py).  Acceptance is exact token
-equality, so the emitted stream is identical to plain greedy decode.
+engine round drafts up to ``spec_k`` tokens with the cheap ``draft_bits``
+weight set and verifies them in one multi-token pass at the request's own
+``w_bits`` (serve/spec_decode.py).  Greedy requests accept on exact token
+equality (emitted stream identical to plain greedy decode); sampled requests
+run speculative *rejection* sampling, which matches the target distribution
+exactly without matching any particular plain-sampled stream bit-for-bit.
 
-Termination: a request finishes when it has emitted ``max_new_tokens``, or
-the moment it emits ``eos_id`` (or any token in ``stop_tokens``) — in
-prefill, plain decode, and the speculative verify path alike.  The stop
-token itself is kept in ``out_tokens``.
+Termination: a request finishes when it has emitted ``max_new_tokens``
+(``finish_reason == "length"``), or the moment it emits ``eos_id`` / any
+token in ``stop_tokens`` (``"stop"``, token kept) — in prefill, plain
+decode, and the speculative verify path alike.  A request whose context can
+never fit the page pool is FAILED (``"failed"``) with ``error`` set.
 
-Decoding is greedy, which is what makes recompute-style preemption safe: a
-preempted request re-prefills ``prompt + out_tokens[:-1]`` and continues
-deterministically (speculative rounds emit exactly the greedy stream, so the
-invariant survives spec decoding unchanged).
+Recompute-style preemption is safe for both decode modes: a preempted
+request re-prefills ``prompt + out_tokens[:-1]`` and continues — greedy
+deterministically, sampled because token position ``p`` always draws with
+the key ``fold_in(PRNGKey(seed), p)``, so the replayed continuation redraws
+the same tokens it would have drawn uninterrupted.
 """
 from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
@@ -48,6 +57,10 @@ class ServeRequest:
     stop_tokens: tuple[int, ...] = ()  # additional stop token ids
     spec_k: int = 0  # speculative draft tokens per round (0 = plain decode)
     draft_bits: int = 4  # weight precision of the speculative draft passes
+    temperature: float = 0.0  # 0 = greedy argmax; > 0 samples
+    top_k: int = 0  # keep k highest logits (0 = disabled)
+    top_p: float = 1.0  # nucleus mass (1.0 = disabled)
+    seed: int = 0  # per-request PRNG seed (position-keyed, see params.py)
     arrival: int = 0  # engine-assigned admission-order ticket (FCFS key)
     state: RequestState = RequestState.WAITING
     out_tokens: list[int] = field(default_factory=list)
@@ -56,6 +69,9 @@ class ServeRequest:
     submit_ts: float = 0.0  # perf_counter at submit (TTFT reference point)
     ttft: float | None = None  # submit -> first output token, seconds
     error: str | None = None  # set when state is FAILED
+    finish_reason: Optional[str] = None  # "stop" | "length" | "failed"
+    spec_drafted: int = 0  # this request's drafted tokens (spec rounds)
+    spec_accepted: int = 0  # drafts the verify accepted AND emission used
 
     @property
     def done(self) -> bool:
@@ -64,6 +80,10 @@ class ServeRequest:
     @property
     def failed(self) -> bool:
         return self.state is RequestState.FAILED
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
 
     @property
     def group_key(self) -> tuple[int, int]:

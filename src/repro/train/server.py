@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.serve.engine import ServeEngine
+from repro.serve.params import PrecisionParams, SamplingParams
 
 
 @dataclass
@@ -106,9 +107,13 @@ class Server:
             raise NotImplementedError("engine decoding is greedy-only")
         if self.engine is None:
             return self._serve_waves(requests)
+        precision = PrecisionParams(w_bits=self.w_bits)
         handles = [
             self.engine.submit(
-                r.prompt, r.max_new_tokens, w_bits=self.w_bits, rid=r.rid
+                r.prompt,
+                SamplingParams(max_new_tokens=r.max_new_tokens),
+                precision,
+                rid=r.rid,
             )
             for r in requests
         ]

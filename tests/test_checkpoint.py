@@ -1,5 +1,4 @@
 """Checkpointing: roundtrip, atomicity, keep-N, async, elastic reshard."""
-import json
 import os
 
 import jax

@@ -10,7 +10,7 @@ import pytest
 from repro.configs import get_config
 from repro.kernels import ops, ref
 from repro.kernels.mqa_decode import mqa_decode_pallas
-from repro.quant.pack import pack_int4, unpack_int4
+from repro.quant.pack import pack_int4
 from repro.serve.kv_cache import PagedKVCache
 
 RNG = np.random.default_rng(0)
@@ -219,12 +219,10 @@ def test_append_then_attend_roundtrip():
         (jnp.asarray(per_layer_k), jnp.asarray(per_layer_v),
          jnp.asarray(per_layer_ks), jnp.asarray(per_layer_vs)),
     )
-    from repro.serve.decode import _gather_pages
-
-    gk = _gather_pages(cache.k, tables)
-    gv = _gather_pages(cache.v, tables)
-    gks = _gather_pages(cache.k_scale, tables)
-    gvs = _gather_pages(cache.v_scale, tables)
+    gk = ref.gather_pages(cache.k, tables)
+    gv = ref.gather_pages(cache.v, tables)
+    gks = ref.gather_pages(cache.k_scale, tables)
+    gvs = ref.gather_pages(cache.v_scale, tables)
     for layer in range(L):
         stored = ref.mqa_decode_ref(
             q, gk[layer], gv[layer], gks[layer], gvs[layer],

@@ -1,0 +1,91 @@
+"""The serving CLI (repro.launch.serve): argument parsing, a tiny
+end-to-end run through the streaming generate() path, and fixed-seed
+determinism of the sampled streams (same seed twice => identical outputs).
+"""
+import json
+
+import pytest
+
+from repro.launch.serve import build_parser, main
+
+E2E_ARGS = [
+    "--arch", "yi-9b", "--reduced",
+    "--requests", "2", "--prompt-len", "6", "--new-tokens", "4",
+    "--batch-size", "2", "--page-size", "8",
+]
+
+
+# ---------------------------------------------------------------- arg parsing
+def test_parser_defaults():
+    args = build_parser().parse_args(["--arch", "yi-9b"])
+    assert args.arch == "yi-9b" and not args.reduced
+    assert args.requests == 4 and args.new_tokens == 16
+    assert args.w_bits == 0 and args.kv_bits == 0  # 0 = arch default
+    assert args.precision_mix == "" and args.spec_k == 0
+    # sampling defaults: greedy, no masks, seed 0
+    assert args.temperature == 0.0
+    assert args.top_k == 0 and args.top_p == 1.0 and args.seed == 0
+    assert args.eos_id is None
+
+
+def test_parser_sampling_and_spec_flags():
+    args = build_parser().parse_args([
+        "--arch", "llama3.2-3b", "--reduced",
+        "--temperature", "0.8", "--top-k", "50", "--top-p", "0.9",
+        "--seed", "3", "--spec-k", "2", "--draft-bits", "8",
+        "--precision-mix", "4,8", "--eos-id", "7",
+    ])
+    assert args.temperature == 0.8 and args.top_k == 50 and args.top_p == 0.9
+    assert args.seed == 3 and args.spec_k == 2 and args.draft_bits == 8
+    assert args.precision_mix == "4,8" and args.eos_id == 7
+
+
+def test_parser_requires_arch(capsys):
+    with pytest.raises(SystemExit):
+        build_parser().parse_args([])
+    capsys.readouterr()  # swallow argparse usage noise
+
+
+def test_shared_prefix_must_be_shorter_than_prompt():
+    with pytest.raises(SystemExit, match="shared-prefix"):
+        main(["--arch", "yi-9b", "--reduced",
+              "--prompt-len", "8", "--shared-prefix", "8"])
+
+
+def test_sampling_flags_rejected_on_static_wave_fallback():
+    """Recurrent-cache archs fall back to the greedy-only wave server; the
+    CLI must refuse sampling flags instead of silently reporting greedy
+    output as sampled."""
+    with pytest.raises(SystemExit, match="static-wave"):
+        main(["--arch", "mamba2-130m", "--reduced",
+              "--temperature", "0.8", "--seed", "7"])
+
+
+# ------------------------------------------------------------- end to end
+def test_cli_end_to_end_greedy(capsys):
+    report = main(E2E_ARGS + ["--precision-mix", "4,8"])
+    assert report["requests"] == 2
+    assert report["tokens_out"] == 8
+    assert report["stream_events"] == 8  # one StreamEvent per token
+    assert report["finish_reasons"] == ["length", "length"]
+    assert [len(o) for o in report["outputs"]] == [4, 4]
+    assert report["w_bits_mix"] == [4, 8]
+    assert report["decode_tok_per_s"] > 0
+    # the report is also printed as valid JSON
+    printed = json.loads(capsys.readouterr().out)
+    assert printed["outputs"] == report["outputs"]
+
+
+def test_cli_seed_determinism(capsys):
+    """Same seed twice => bit-identical streams; a different seed diverges."""
+    sampled = E2E_ARGS + ["--temperature", "0.8", "--top-p", "0.95"]
+    a = main(sampled + ["--seed", "123"])
+    b = main(sampled + ["--seed", "123"])
+    c = main(sampled + ["--seed", "124"])
+    capsys.readouterr()
+    assert a["outputs"] == b["outputs"]
+    assert a["outputs"] != c["outputs"]  # w.h.p. on a 512-vocab model
+    # distinct per-request seeds (seed + i): identical prompts would still
+    # diverge between requests; here prompts differ too, so just sanity-check
+    # the two requests' streams are not identical
+    assert a["outputs"][0] != a["outputs"][1]

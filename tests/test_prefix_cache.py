@@ -10,7 +10,14 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import PagedKVCache, PrefixCache, ServeEngine, block_hashes
+from repro.serve import (
+    PagedKVCache,
+    PrecisionParams,
+    PrefixCache,
+    SamplingParams,
+    ServeEngine,
+    block_hashes,
+)
 
 
 def _cfg(**kw):
@@ -130,7 +137,9 @@ def _run_engine(cfg, params, prompts, new_tokens=4, prefill_chunk=32, **submit_k
         cfg, params, max_slots=len(prompts), num_pages=64, page_size=4,
         prefill_chunk=prefill_chunk,
     )
-    reqs = [eng.submit(p, new_tokens, **submit_kw) for p in prompts]
+    sampling = SamplingParams(max_new_tokens=new_tokens)
+    precision = PrecisionParams(**submit_kw)
+    reqs = [eng.submit(p, sampling, precision) for p in prompts]
     eng.run()
     return eng, reqs
 
@@ -186,9 +195,9 @@ def test_warm_prefix_equals_cold_run(setup, kv_bits):
 
     eng = ServeEngine(cfg, params, max_slots=2, num_pages=64, page_size=4,
                       prefill_chunk=8)
-    a = eng.submit(prompts[0], 5, w_bits=w_bits, kv_bits=kv_bits)
+    a = eng.submit(prompts[0], SamplingParams(max_new_tokens=5), PrecisionParams(w_bits=w_bits, kv_bits=kv_bits))
     eng.run()
-    b = eng.submit(prompts[1], 5, w_bits=w_bits, kv_bits=kv_bits)
+    b = eng.submit(prompts[1], SamplingParams(max_new_tokens=5), PrecisionParams(w_bits=w_bits, kv_bits=kv_bits))
     eng.run()
     assert eng.stats.prefix_hit_tokens >= 16  # b adopted the shared prefix
 
@@ -196,7 +205,7 @@ def test_warm_prefix_equals_cold_run(setup, kv_bits):
         cold_eng = ServeEngine(cfg, params, max_slots=1, num_pages=64,
                                page_size=4, prefill_chunk=8,
                                enable_prefix_cache=False)
-        cold = cold_eng.submit(prompts[i], 5, w_bits=w_bits, kv_bits=kv_bits)
+        cold = cold_eng.submit(prompts[i], SamplingParams(max_new_tokens=5), PrecisionParams(w_bits=w_bits, kv_bits=kv_bits))
         cold_eng.run()
         assert warm.out_tokens == cold.out_tokens, f"request {i} (kv{kv_bits})"
 
@@ -210,9 +219,9 @@ def test_full_prompt_hit_forks_divergence_page(setup):
     prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)  # 4 pages of 4
     eng = ServeEngine(cfg, params, max_slots=1, num_pages=32, page_size=4,
                       prefill_chunk=8)
-    a = eng.submit(prompt, 4, w_bits=8, kv_bits=8)
+    a = eng.submit(prompt, SamplingParams(max_new_tokens=4), PrecisionParams(w_bits=8, kv_bits=8))
     eng.run()
-    b = eng.submit(prompt, 4, w_bits=8, kv_bits=8)
+    b = eng.submit(prompt, SamplingParams(max_new_tokens=4), PrecisionParams(w_bits=8, kv_bits=8))
     eng.run()
     pc = eng.prefix_cache_for(8)
     assert pc.stats.forks >= 1
@@ -258,7 +267,7 @@ def test_preempt_evict_readmit_matches_uncached_run(setup):
     def run(enable):
         eng = ServeEngine(cfg, params, max_slots=3, num_pages=10, page_size=4,
                           prefill_chunk=16, enable_prefix_cache=enable)
-        reqs = [eng.submit(p, 8, w_bits=8, kv_bits=8) for p in prompts]
+        reqs = [eng.submit(p, SamplingParams(max_new_tokens=8), PrecisionParams(w_bits=8, kv_bits=8)) for p in prompts]
         eng.run()
         return eng, reqs
 
@@ -280,7 +289,7 @@ def test_preempt_resumes_from_cached_pages(setup):
 
     eng = ServeEngine(cfg, params, max_slots=1, num_pages=32, page_size=4,
                       prefill_chunk=16)
-    req = eng.submit(prompt, 8, w_bits=8, kv_bits=8)
+    req = eng.submit(prompt, SamplingParams(max_new_tokens=8), PrecisionParams(w_bits=8, kv_bits=8))
     for _ in range(5):  # prefill + a few decode steps
         eng.step()
     assert len(req.out_tokens) >= 4
@@ -295,7 +304,7 @@ def test_preempt_resumes_from_cached_pages(setup):
     undisturbed = ServeEngine(cfg, params, max_slots=1, num_pages=32,
                               page_size=4, prefill_chunk=16,
                               enable_prefix_cache=False)
-    ref = undisturbed.submit(prompt, 8, w_bits=8, kv_bits=8)
+    ref = undisturbed.submit(prompt, SamplingParams(max_new_tokens=8), PrecisionParams(w_bits=8, kv_bits=8))
     undisturbed.run()
     assert req.out_tokens == ref.out_tokens
 
@@ -308,19 +317,19 @@ def test_cross_precision_isolation(setup):
     prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)
     eng = ServeEngine(cfg, params, max_slots=1, num_pages=64, page_size=4,
                       prefill_chunk=16)
-    eng.submit(prompt, 2, w_bits=8, kv_bits=8)
+    eng.submit(prompt, SamplingParams(max_new_tokens=2), PrecisionParams(w_bits=8, kv_bits=8))
     eng.run()
     hits0 = eng.stats.prefix_hit_tokens
     # same tokens, bf16 KV: different pool, no hit possible
-    eng.submit(prompt, 2, w_bits=16, kv_bits=16)
+    eng.submit(prompt, SamplingParams(max_new_tokens=2), PrecisionParams(w_bits=16, kv_bits=16))
     eng.run()
     assert eng.stats.prefix_hit_tokens == hits0
     # same tokens, same kv pool, different weight precision: salt separates
-    eng.submit(prompt, 2, w_bits=4, kv_bits=8)
+    eng.submit(prompt, SamplingParams(max_new_tokens=2), PrecisionParams(w_bits=4, kv_bits=8))
     eng.run()
     assert eng.stats.prefix_hit_tokens == hits0
     # and the same (w, kv) choice *does* hit
-    eng.submit(prompt, 2, w_bits=8, kv_bits=8)
+    eng.submit(prompt, SamplingParams(max_new_tokens=2), PrecisionParams(w_bits=8, kv_bits=8))
     eng.run()
     assert eng.stats.prefix_hit_tokens > hits0
 
@@ -332,10 +341,10 @@ def test_interleaved_prefill_does_not_stall_decode(setup):
     rng = np.random.default_rng(10)
     eng = ServeEngine(cfg, params, max_slots=2, num_pages=64, page_size=4,
                       prefill_chunk=4)
-    a = eng.submit(rng.integers(0, cfg.vocab, 4).astype(np.int32), 12, w_bits=8)
+    a = eng.submit(rng.integers(0, cfg.vocab, 4).astype(np.int32), SamplingParams(max_new_tokens=12), PrecisionParams(w_bits=8))
     eng.step()
     before = len(a.out_tokens)
-    b = eng.submit(rng.integers(0, cfg.vocab, 24).astype(np.int32), 2, w_bits=8)
+    b = eng.submit(rng.integers(0, cfg.vocab, 24).astype(np.int32), SamplingParams(max_new_tokens=2), PrecisionParams(w_bits=8))
     eng.step()  # b prefills its first chunk only...
     assert 0 < b.cache_len < 24
     assert len(a.out_tokens) > before  # ...while a decoded in the same step

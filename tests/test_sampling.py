@@ -1,0 +1,438 @@
+"""Seeded stochastic sampling across the serving engine.
+
+Op level: top-k/top-p mask + temperature distribution vs a numpy oracle,
+greedy == exact argmax, empirical sample distribution vs the exact probs.
+Engine level: fixed-seed determinism, batch-composition independence,
+preempt-resume equivalence, the deprecated submit() kwargs shim, and the
+streaming generate() contract.  Speculative rejection sampling: greedy
+one-hot collapse (exact equality) and chi-squared agreement of the emitted
+marginal with the target distribution at n >= 10k sampled tokens.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.models import transformer as T
+from repro.serve import (
+    GenerationOutput,
+    PrecisionParams,
+    SamplingParams,
+    ServeEngine,
+    StreamEvent,
+)
+from repro.serve.spec_decode import SALT_DRAFT, rejection_sample
+
+# chi-squared critical values at alpha = 1e-3 (Wilson-Hilferty), keyed by
+# degrees of freedom — no scipy in the test environment
+CHI2_CRIT = {7: 24.32, 15: 37.70, 31: 61.10}
+
+
+def _cfg(**kw):
+    base = dataclasses.replace(
+        get_config("llama3.2-3b").reduced(),
+        n_layers=2, d_model=64, d_ff=128, vocab=256, n_heads=4, n_kv_heads=2,
+        head_dim=16, serve_kv_bits=8,
+    )
+    return dataclasses.replace(base, **kw)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, n_slots=4, num_pages=64, **kw):
+    return ServeEngine(
+        cfg, params, max_slots=n_slots, num_pages=num_pages, page_size=4, **kw
+    )
+
+
+def _sampled(seed, new_tokens=6, **kw):
+    return SamplingParams(
+        temperature=0.8, top_p=0.95, seed=seed, max_new_tokens=new_tokens, **kw
+    )
+
+
+# ------------------------------------------------------------ op-level masks
+def _np_sampling_probs(logits, temp, top_k, top_p):
+    """Numpy oracle for ops.sampling_probs (single row)."""
+    v = logits.shape[-1]
+    if temp <= 0:
+        out = np.zeros(v)
+        out[np.argmax(logits)] = 1.0
+        return out
+    keep = np.ones(v, bool)
+    if top_k > 0:
+        kth = np.sort(logits)[::-1][min(top_k, v) - 1]
+        keep &= logits >= kth
+    x = np.where(keep, logits, -np.inf)
+    p = np.exp(x - x.max())
+    p /= p.sum()
+    order = np.argsort(x)[::-1]
+    cum = np.cumsum(p[order])
+    keep_p = np.zeros(v, bool)
+    keep_p[order] = ((cum - p[order]) < top_p) | (top_p >= 1.0)
+    x = np.where(keep & keep_p, logits, -np.inf)
+    x = x / temp
+    p = np.exp(x - x.max())
+    return p / p.sum()
+
+
+@pytest.mark.parametrize(
+    "temp,top_k,top_p",
+    [(1.0, 0, 1.0), (0.7, 5, 1.0), (1.3, 0, 0.9), (0.8, 10, 0.5),
+     (2.0, 3, 0.95), (0.0, 5, 0.5)],
+)
+def test_sampling_probs_matches_numpy_oracle(temp, top_k, top_p):
+    rng = np.random.default_rng(0)
+    b, v = 8, 64
+    logits = rng.standard_normal((b, v)).astype(np.float32) * 2.0
+    got = np.asarray(
+        ops.sampling_probs(
+            jnp.asarray(logits),
+            jnp.full(b, temp, jnp.float32),
+            jnp.full(b, top_k, jnp.int32),
+            jnp.full(b, top_p, jnp.float32),
+        )
+    )
+    want = np.stack(
+        [_np_sampling_probs(logits[i], temp, top_k, top_p) for i in range(b)]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_greedy_rows_are_exact_argmax():
+    """temperature == 0 must return the raw argmax bit-for-bit, whatever the
+    keys and masks say — the engine's greedy golden streams depend on it."""
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.standard_normal((16, 128)), jnp.float32)
+    keys = ops.sample_keys(
+        jnp.arange(16, dtype=jnp.uint32), jnp.arange(16, dtype=jnp.int32)
+    )
+    toks = ops.sample_tokens(
+        logits, keys,
+        jnp.zeros(16, jnp.float32),  # greedy
+        jnp.full(16, 3, jnp.int32), jnp.full(16, 0.5, jnp.float32),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(toks), np.asarray(jnp.argmax(logits, axis=-1))
+    )
+
+
+def test_sample_tokens_distribution_matches_probs():
+    """Empirical distribution of sample_tokens over many keys chi-squares
+    against the exact sampling_probs distribution (top-k + top-p active)."""
+    rng = np.random.default_rng(2)
+    v, n = 16, 20000
+    logits = rng.standard_normal(v).astype(np.float32)
+    temp, top_k, top_p = 0.9, 12, 0.95
+    tiled = jnp.tile(jnp.asarray(logits)[None], (n, 1))
+    keys = ops.sample_keys(
+        jnp.arange(n, dtype=jnp.uint32), jnp.zeros(n, jnp.int32)
+    )
+    toks = np.asarray(
+        ops.sample_tokens(
+            tiled, keys,
+            jnp.full(n, temp, jnp.float32),
+            jnp.full(n, top_k, jnp.int32),
+            jnp.full(n, top_p, jnp.float32),
+        )
+    )
+    expect = _np_sampling_probs(logits, temp, top_k, top_p) * n
+    counts = np.bincount(toks, minlength=v).astype(np.float64)
+    live = expect > 0
+    assert counts[~live].sum() == 0  # masked tokens never sampled
+    chi2 = np.sum((counts[live] - expect[live]) ** 2 / expect[live])
+    assert chi2 < CHI2_CRIT[15], f"chi2 {chi2:.1f} (dof<=15)"
+
+
+def test_disabled_top_p_masks_nothing_even_under_f32_rounding():
+    """top_p == 1.0 (disabled) must keep every token even when a head-heavy
+    distribution makes the f32 exclusive-cumulative mass round to exactly
+    1.0 — the masked graph (forced by a batch-mate's top_p < 1) must equal
+    the elided graph, or batch composition would leak into streams."""
+    v = 1024
+    logits = np.full(v, -14.0, np.float32)
+    logits[0] = 10.0  # ~all mass on token 0, tail mass rounds cum to 1.0
+    l2 = jnp.asarray(np.stack([logits, logits]))
+    temps = jnp.full(2, 1.0, jnp.float32)
+    masked = ops.sampling_probs(
+        l2, temps, jnp.zeros(2, jnp.int32),
+        jnp.asarray([1.0, 0.9], jnp.float32),  # row 0 disabled, row 1 active
+    )
+    elided = ops.sampling_probs(l2, temps, None, None)
+    np.testing.assert_array_equal(
+        np.asarray(masked[0]), np.asarray(elided[0])
+    )
+    assert int((np.asarray(masked[0]) > 0).sum()) == v  # nothing masked
+
+
+def test_seed_must_fit_uint32():
+    """_samp_arrays packs seeds into np.uint32; an oversized seed must be
+    rejected at SamplingParams construction, not crash the engine mid-serve."""
+    with pytest.raises(ValueError, match="uint32"):
+        SamplingParams(seed=2**33)
+    SamplingParams(seed=2**32 - 1)  # max valid
+
+
+def test_sample_keys_are_position_and_salt_separated():
+    seeds = jnp.asarray([3, 3, 3, 4], jnp.uint32)
+    pos = jnp.asarray([0, 0, 1, 0], jnp.int32)
+    a = np.asarray(ops.sample_keys(seeds, pos, salt=0))
+    b = np.asarray(ops.sample_keys(seeds, pos, salt=1))
+    assert (a[0] == a[1]).all()  # same (seed, pos, salt) -> same key
+    assert (a[0] != a[2]).any()  # position separates
+    assert (a[0] != a[3]).any()  # seed separates
+    assert (a[0] != b[0]).any()  # salt separates
+
+
+# ------------------------------------------------------- engine determinism
+def test_fixed_seed_determinism_and_batch_independence(setup):
+    """The same seeds replay the same sampled streams run-to-run, and a
+    request's stream is identical whether it decodes solo or batched with
+    strangers (position-keyed PRNG, batch-independent logits)."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32) for _ in range(3)]
+    seeds = [11, 22, 33]
+
+    def run_batch():
+        eng = _engine(cfg, params, n_slots=3)
+        reqs = [
+            eng.submit(p, _sampled(s), PrecisionParams(w_bits=8, kv_bits=8))
+            for p, s in zip(prompts, seeds)
+        ]
+        eng.run()
+        return [r.out_tokens for r in reqs]
+
+    first = run_batch()
+    assert run_batch() == first  # run-to-run reproducible
+    assert len(set(map(tuple, first))) == 3  # different seeds diverge (w.h.p.)
+    for i in range(3):  # solo == batched, token for token
+        eng = _engine(cfg, params, n_slots=1)
+        solo = eng.submit(
+            prompts[i], _sampled(seeds[i]), PrecisionParams(w_bits=8, kv_bits=8)
+        )
+        eng.run()
+        assert solo.out_tokens == first[i], f"request {i}"
+
+
+def test_preempt_resume_sampled_equivalence(setup):
+    """A preempted sampled request recomputes its cache and *redraws* its
+    continuation with the same position keys: the stream must equal the
+    undisturbed run's, token for token."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, 10).astype(np.int32) for _ in range(3)]
+
+    def run(num_pages):
+        eng = _engine(cfg, params, n_slots=3, num_pages=num_pages)
+        reqs = [
+            eng.submit(
+                p, _sampled(50 + i, new_tokens=8),
+                PrecisionParams(w_bits=8, kv_bits=8),
+            )
+            for i, p in enumerate(prompts)
+        ]
+        eng.run()
+        return eng, [r.out_tokens for r in reqs]
+
+    tight_eng, tight = run(num_pages=10)  # pool too small: preempt + replay
+    roomy_eng, roomy = run(num_pages=64)
+    assert tight_eng.stats.preemptions > 0
+    assert roomy_eng.stats.preemptions == 0
+    assert tight == roomy
+
+
+def test_submit_legacy_kwargs_shim(setup):
+    """The deprecated flat-kwargs signature still works (warning once) and
+    produces the identical request the structured form does."""
+    cfg, params = setup
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng = _engine(cfg, params)
+    with pytest.warns(DeprecationWarning, match="SamplingParams"):
+        old = eng.submit(prompt, 5, w_bits=8, kv_bits=8, eos_id=7,
+                         stop_tokens=(9,), spec_k=2, draft_bits=4)
+    new = eng.submit(
+        prompt,
+        SamplingParams(max_new_tokens=5, eos_id=7, stop_tokens=(9,)),
+        PrecisionParams(w_bits=8, kv_bits=8, spec_k=2, draft_bits=4),
+    )
+    for f in ("max_new_tokens", "w_bits", "kv_bits", "eos_id", "stop_tokens",
+              "spec_k", "draft_bits", "temperature", "top_k", "top_p", "seed"):
+        assert getattr(old, f) == getattr(new, f), f
+    # structured + conflicting flat kwargs is an error, not a silent merge
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="PrecisionParams"):
+            eng.submit(prompt, SamplingParams(), PrecisionParams(), w_bits=4)
+    with pytest.raises(TypeError, match="unexpected"):
+        with pytest.warns(DeprecationWarning):
+            eng.submit(prompt, 5, nonsense_kwarg=1)
+
+
+def test_generate_streams_every_token_then_terminal_output(setup):
+    """generate() yields each token exactly once, in order, with the
+    finish_reason on the last event, then the terminal GenerationOutput."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32) for _ in range(2)]
+    eng = _engine(cfg, params)
+    reqs = [
+        eng.submit(prompts[0], SamplingParams(max_new_tokens=5)),
+        eng.submit(prompts[1], _sampled(9, new_tokens=7)),
+    ]
+    events: dict[int, list[StreamEvent]] = {r.rid: [] for r in reqs}
+    outputs: dict[int, GenerationOutput] = {}
+    for ev in eng.generate(reqs):
+        if isinstance(ev, StreamEvent):
+            assert ev.rid not in outputs, "token after terminal output"
+            events[ev.rid].append(ev)
+        else:
+            outputs[ev.rid] = ev
+    for r in reqs:
+        evs = events[r.rid]
+        assert [e.token for e in evs] == r.out_tokens
+        assert [e.index for e in evs] == list(range(len(r.out_tokens)))
+        assert all(e.finish_reason is None for e in evs[:-1])
+        assert evs[-1].finish_reason == "length" and evs[-1].is_last
+        out = outputs[r.rid]
+        assert list(out.tokens) == r.out_tokens
+        assert out.finish_reason == "length" and out.ttft is not None
+    # a stopped request reports finish_reason == "stop" with the token kept
+    eos = reqs[0].out_tokens[2]
+    eng2 = _engine(cfg, params)
+    outs = [
+        ev for ev in eng2.generate(
+            [(prompts[0], SamplingParams(max_new_tokens=5, eos_id=eos))]
+        )
+        if isinstance(ev, GenerationOutput)
+    ]
+    assert outs[0].finish_reason == "stop"
+    assert outs[0].tokens[-1] == eos
+
+
+def test_generate_failed_request_yields_failed_output(setup):
+    cfg, params = setup
+    eng = _engine(cfg, params, n_slots=1, num_pages=4)
+    with pytest.raises(ValueError, match="never fit"):
+        eng.submit(np.arange(8, dtype=np.int32), SamplingParams(max_new_tokens=64))
+    ok = eng.submit(np.arange(4, dtype=np.int32), SamplingParams(max_new_tokens=2))
+    from repro.serve import ServeRequest
+
+    big = ServeRequest(rid=99, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=64, w_bits=8, kv_bits=8, arrival=10**6)
+    eng._sched.submit(big)
+    outs = {
+        ev.rid: ev for ev in eng.generate([ok, big])
+        if isinstance(ev, GenerationOutput)
+    }
+    assert outs[ok.rid].finish_reason == "length"
+    assert outs[99].finish_reason == "failed"
+    assert outs[99].tokens == () and "never fit" in outs[99].error
+
+
+# ------------------------------------------- speculative rejection sampling
+def test_rejection_sample_greedy_onehots_collapse_to_equality():
+    """One-hot draft/target distributions (greedy rows) must reproduce the
+    exact-equality acceptance rule: accept while the draft equals the target
+    argmax, then emit the target argmax at the cut."""
+    v, k = 8, 3
+    tgt_ids = np.array([2, 5, 1, 4])  # target argmax at each window slot
+    for n_match in range(k + 1):
+        drafts = np.array(
+            [[tgt_ids[i] if i < n_match else (tgt_ids[i] + 1) % v
+              for i in range(k)]]
+        )
+        qd = np.zeros((1, k, v), np.float32)
+        qd[0, np.arange(k), drafts[0]] = 1.0
+        qt = np.zeros((1, k + 1, v), np.float32)
+        qt[0, np.arange(k + 1), tgt_ids] = 1.0
+        tokens, accept = rejection_sample(
+            jnp.asarray(drafts), jnp.asarray(qd), jnp.asarray(qt),
+            jnp.asarray([123], jnp.uint32), jnp.asarray([0], jnp.int32),
+            jnp.asarray([k], jnp.int32),
+        )
+        assert int(accept[0]) == n_match
+        got = [int(t) for t in np.asarray(tokens)[0, : n_match + 1]]
+        assert got == list(tgt_ids[: n_match + 1]), f"n_match={n_match}"
+
+
+def test_spec_sampled_marginal_matches_target_chi2():
+    """Speculative rejection sampling's emitted first token must be
+    distributed exactly as the target distribution (Leviathan et al.):
+    chi-squared over n = 20k sampled windows on a toy draft/target pair."""
+    v, k, n = 8, 2, 20000
+    rng = np.random.default_rng(6)
+    qd0 = rng.random(v).astype(np.float32) + 0.05
+    qd0 /= qd0.sum()
+    qt0 = rng.random(v).astype(np.float32) + 0.05
+    qt0 /= qt0.sum()
+    seeds = jnp.arange(n, dtype=jnp.uint32)
+    pos0 = jnp.zeros(n, jnp.int32)
+    # drafts drawn exactly as spec_decode_round draws them: from the draft
+    # distribution with the (seed, pos, SALT_DRAFT) key
+    d0 = ops.sample_from_probs(
+        jnp.tile(jnp.asarray(qd0)[None], (n, 1)),
+        ops.sample_keys(seeds, pos0, SALT_DRAFT),
+    )
+    d1 = ops.sample_from_probs(
+        jnp.tile(jnp.asarray(qd0)[None], (n, 1)),
+        ops.sample_keys(seeds, pos0 + 1, SALT_DRAFT),
+    )
+    drafts = jnp.stack([d0, d1], axis=1)
+    qd = jnp.tile(jnp.asarray(qd0)[None, None], (n, k, 1))
+    qt = jnp.tile(jnp.asarray(qt0)[None, None], (n, k + 1, 1))
+    tokens, accept = rejection_sample(
+        drafts, qd, qt, seeds, pos0, jnp.full(n, k, jnp.int32)
+    )
+    emitted = np.asarray(tokens)[:, 0]  # first emitted token of each window
+    counts = np.bincount(emitted, minlength=v).astype(np.float64)
+    expect = qt0.astype(np.float64) * n
+    chi2 = np.sum((counts - expect) ** 2 / expect)
+    assert chi2 < CHI2_CRIT[7], f"chi2 {chi2:.1f} vs target marginal (dof 7)"
+    # expected accept length: slots accept independently w.p.
+    # a = sum(min(qd, qt)), and accept is the leading run of successes, so
+    # E[accept] = a + a^2 + ... + a^k
+    a = float(np.minimum(qd0, qt0).sum())
+    expected_len = sum(a ** i for i in range(1, k + 1))
+    assert abs(float(np.asarray(accept).mean()) - expected_len) < 0.02 * k
+
+
+def test_spec_sampled_engine_stream_is_reproducible(setup):
+    """End-to-end spec-sampled decoding: same seeds => identical streams,
+    budgets honored, and per-request accept stats populated."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    motif = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    prompts = [np.tile(motif, 3) for _ in range(2)]
+
+    def run():
+        eng = _engine(cfg, params, n_slots=2, spec_k=3, draft_bits=8)
+        reqs = [
+            eng.submit(p, _sampled(70 + i, new_tokens=8),
+                       PrecisionParams(w_bits=8, kv_bits=8))
+            for i, p in enumerate(prompts)
+        ]
+        eng.run()
+        return eng, reqs
+
+    eng_a, reqs_a = run()
+    eng_b, reqs_b = run()
+    assert [r.out_tokens for r in reqs_a] == [r.out_tokens for r in reqs_b]
+    assert all(len(r.out_tokens) == 8 for r in reqs_a)
+    assert all(0 <= t < cfg.vocab for r in reqs_a for t in r.out_tokens)
+    assert eng_a.stats.spec_rounds > 0
+    # same-precision draft (W8 == W8 target): sampled drafts and target draw
+    # from identical distributions, so rejection acceptance is ~1 — every
+    # request's own counters must reflect it
+    for r in reqs_a:
+        assert r.spec_drafted > 0
+        assert r.spec_accepted <= r.spec_drafted
+    assert eng_a.stats.spec_accept_rate > 0.8

@@ -9,7 +9,15 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import PagedKVCache, RequestState, Scheduler, ServeEngine, ServeRequest
+from repro.serve import (
+    PagedKVCache,
+    PrecisionParams,
+    RequestState,
+    SamplingParams,
+    Scheduler,
+    ServeEngine,
+    ServeRequest,
+)
 
 
 def _req(rid, arrival, prompt_len=8, max_new=4, w_bits=8, kv_bits=8):
@@ -125,7 +133,7 @@ def test_mixed_precision_grouping(setup):
 
     eng = ServeEngine(cfg, params, max_slots=4, num_pages=32, page_size=8)
     mixed = [
-        eng.submit(p, 5, w_bits=4 if i % 2 else 8, kv_bits=8)
+        eng.submit(p, SamplingParams(max_new_tokens=5), PrecisionParams(w_bits=4 if i % 2 else 8, kv_bits=8))
         for i, p in enumerate(prompts)
     ]
     eng.run()
@@ -137,7 +145,7 @@ def test_mixed_precision_grouping(setup):
     for bits in (4, 8):
         solo_eng = ServeEngine(cfg, params, max_slots=4, num_pages=32, page_size=8)
         solo = [
-            solo_eng.submit(p, 5, w_bits=bits, kv_bits=8)
+            solo_eng.submit(p, SamplingParams(max_new_tokens=5), PrecisionParams(w_bits=bits, kv_bits=8))
             for i, p in enumerate(prompts)
             if (4 if i % 2 else 8) == bits
         ]
@@ -153,13 +161,13 @@ def test_batched_equals_sequential(setup):
     prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32) for _ in range(3)]
 
     batched = ServeEngine(cfg, params, max_slots=3, num_pages=24, page_size=8)
-    br = [batched.submit(p, 4, w_bits=16, kv_bits=16) for p in prompts]
+    br = [batched.submit(p, SamplingParams(max_new_tokens=4), PrecisionParams(w_bits=16, kv_bits=16)) for p in prompts]
     batched.run()
 
     seq_tokens = []
     for p in prompts:
         eng = ServeEngine(cfg, params, max_slots=1, num_pages=8, page_size=8)
-        r = eng.submit(p, 4, w_bits=16, kv_bits=16)
+        r = eng.submit(p, SamplingParams(max_new_tokens=4), PrecisionParams(w_bits=16, kv_bits=16))
         eng.run()
         seq_tokens.append(r.out_tokens)
     assert [r.out_tokens for r in br] == seq_tokens
@@ -170,7 +178,7 @@ def test_engine_matches_manual_decode_loop(setup):
     cfg, params = setup
     prompt = np.arange(1, 9, dtype=np.int32)
     eng = ServeEngine(cfg, params, max_slots=1, num_pages=8, page_size=8)
-    req = eng.submit(prompt, 4, w_bits=16, kv_bits=16)
+    req = eng.submit(prompt, SamplingParams(max_new_tokens=4), PrecisionParams(w_bits=16, kv_bits=16))
     eng.run()
 
     logits, cache = T.prefill(params, {"tokens": jnp.asarray(prompt)[None]}, cfg, 64)
@@ -187,7 +195,6 @@ def test_paged_gather_matches_ref_oracle(setup):
     """The paged layout feeds attention the same values as a dense cache:
     gathered pages through the kernel wrapper == kernels/ref.py oracle."""
     from repro.kernels import ops, ref
-    from repro.serve.decode import _gather_pages
 
     cfg, _ = setup
     cache = PagedKVCache(cfg, num_pages=6, page_size=4, kv_bits=8)
@@ -202,10 +209,10 @@ def test_paged_gather_matches_ref_oracle(setup):
     cache.write_prompt(0, jnp.asarray(kq), jnp.asarray(vq), jnp.asarray(ks), jnp.asarray(vs))
 
     tables = cache.table_array([0], width=4)  # padded wider than needed
-    gk = _gather_pages(cache.k, tables)
-    gv = _gather_pages(cache.v, tables)
-    gks = _gather_pages(cache.k_scale, tables)
-    gvs = _gather_pages(cache.v_scale, tables)
+    gk = ref.gather_pages(cache.k, tables)
+    gv = ref.gather_pages(cache.v, tables)
+    gks = ref.gather_pages(cache.k_scale, tables)
+    gvs = ref.gather_pages(cache.v_scale, tables)
 
     q = jnp.asarray(rng.standard_normal((1, cfg.n_heads, hd)), jnp.float32)
     lengths = jnp.asarray([10], jnp.int32)  # ragged: shorter than stored
@@ -231,7 +238,7 @@ def test_preemption_recovers(setup):
     rng = np.random.default_rng(3)
     eng = ServeEngine(cfg, params, max_slots=3, num_pages=4, page_size=4)
     reqs = [
-        eng.submit(rng.integers(0, cfg.vocab, 6).astype(np.int32), 8, w_bits=8)
+        eng.submit(rng.integers(0, cfg.vocab, 6).astype(np.int32), SamplingParams(max_new_tokens=8), PrecisionParams(w_bits=8))
         for _ in range(3)
     ]
     eng.run()
@@ -251,7 +258,7 @@ def test_continuous_refill(setup):
     rng = np.random.default_rng(4)
     eng = ServeEngine(cfg, params, max_slots=2, num_pages=16, page_size=8)
     reqs = [
-        eng.submit(rng.integers(0, cfg.vocab, 8).astype(np.int32), 3 + i, w_bits=16)
+        eng.submit(rng.integers(0, cfg.vocab, 8).astype(np.int32), SamplingParams(max_new_tokens=3 + i), PrecisionParams(w_bits=16))
         for i in range(5)
     ]
     while eng._sched.has_work():

@@ -1,12 +1,7 @@
 """Sharding rules: pattern matching, divisibility validation, tree coverage."""
-import jax
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config
-from repro.distributed.sharding import param_spec, validate_spec
-from repro.models import transformer as T
+from repro.distributed.sharding import param_spec
 
 
 def test_param_spec_rules():

@@ -6,7 +6,6 @@ oversized-context-livelock fixes."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -14,8 +13,10 @@ from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serve import (
     PagedKVCache,
+    PrecisionParams,
     PrefixCache,
     RequestState,
+    SamplingParams,
     ServeEngine,
     ServeRequest,
     block_hashes,
@@ -39,13 +40,17 @@ def setup():
 
 
 def _run(cfg, params, prompts, new_tokens=8, spec_k=0, num_pages=64,
-         prefill_chunk=16, enable_prefix_cache=True, **submit_kw):
+         prefill_chunk=16, enable_prefix_cache=True, eos_id=None,
+         stop_tokens=(), **precision_kw):
     eng = ServeEngine(
         cfg, params, max_slots=len(prompts), num_pages=num_pages, page_size=4,
         prefill_chunk=prefill_chunk, enable_prefix_cache=enable_prefix_cache,
         spec_k=spec_k,
     )
-    reqs = [eng.submit(p, new_tokens, **submit_kw) for p in prompts]
+    sampling = SamplingParams(max_new_tokens=new_tokens, eos_id=eos_id,
+                              stop_tokens=stop_tokens)
+    precision = PrecisionParams(**precision_kw)
+    reqs = [eng.submit(p, sampling, precision) for p in prompts]
     eng.run()
     return eng, reqs
 
@@ -93,7 +98,7 @@ def test_spec_mixed_precision_stream(setup):
     eng = ServeEngine(cfg, params, max_slots=4, num_pages=64, page_size=4,
                       spec_k=2, draft_bits=4)
     spec = [
-        eng.submit(p, 6, w_bits=w, kv_bits=k)
+        eng.submit(p, SamplingParams(max_new_tokens=6), PrecisionParams(w_bits=w, kv_bits=k))
         for p, (w, k) in zip(prompts, mix)
     ]
     eng.run()
@@ -133,9 +138,9 @@ def test_spec_with_warm_prefix_start(setup):
 
     eng = ServeEngine(cfg, params, max_slots=2, num_pages=64, page_size=4,
                       prefill_chunk=8, spec_k=3)
-    a = eng.submit(prompts[0], 6, w_bits=8, kv_bits=8)
+    a = eng.submit(prompts[0], SamplingParams(max_new_tokens=6), PrecisionParams(w_bits=8, kv_bits=8))
     eng.run()
-    b = eng.submit(prompts[1], 6, w_bits=8, kv_bits=8)
+    b = eng.submit(prompts[1], SamplingParams(max_new_tokens=6), PrecisionParams(w_bits=8, kv_bits=8))
     eng.run()
     assert eng.stats.prefix_hit_tokens >= 12  # b adopted the shared prefix
 
@@ -315,7 +320,7 @@ def test_oversized_request_rejected_at_submit(setup):
     cfg, params = setup
     eng = ServeEngine(cfg, params, max_slots=1, num_pages=4, page_size=4)
     with pytest.raises(ValueError, match="never fit"):
-        eng.submit(np.arange(8, dtype=np.int32), 32, w_bits=8, kv_bits=8)
+        eng.submit(np.arange(8, dtype=np.int32), SamplingParams(max_new_tokens=32), PrecisionParams(w_bits=8, kv_bits=8))
 
 
 def test_oversized_request_fails_at_admission_without_livelock(setup):
@@ -325,7 +330,7 @@ def test_oversized_request_fails_at_admission_without_livelock(setup):
     the admission as progress."""
     cfg, params = setup
     eng = ServeEngine(cfg, params, max_slots=2, num_pages=4, page_size=4)
-    ok = eng.submit(np.arange(4, dtype=np.int32), 4, w_bits=8, kv_bits=8)
+    ok = eng.submit(np.arange(4, dtype=np.int32), SamplingParams(max_new_tokens=4), PrecisionParams(w_bits=8, kv_bits=8))
     big = ServeRequest(rid=99, prompt=np.arange(8, dtype=np.int32),
                        max_new_tokens=64, w_bits=8, kv_bits=8, arrival=10**6)
     eng._sched.submit(big)
@@ -346,6 +351,6 @@ def test_failed_head_does_not_starve_followers(setup):
     big = ServeRequest(rid=50, prompt=np.arange(8, dtype=np.int32),
                        max_new_tokens=64, w_bits=8, kv_bits=8, arrival=-1)
     eng._sched.submit(big)  # sits at the head of the queue
-    ok = eng.submit(np.arange(4, dtype=np.int32), 4, w_bits=8, kv_bits=8)
+    ok = eng.submit(np.arange(4, dtype=np.int32), SamplingParams(max_new_tokens=4), PrecisionParams(w_bits=8, kv_bits=8))
     eng.run()
     assert big.failed and ok.done and len(ok.out_tokens) == 4
